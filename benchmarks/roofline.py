@@ -1,0 +1,80 @@
+"""Roofline table generator: reads results/dryrun/*.json → EXPERIMENTS.md
+§Dry-run/§Roofline markdown.
+
+Methodology note (documented in EXPERIMENTS.md): XLA's cost_analysis counts
+each while-loop body ONCE, so scanned-layer programs under-report flops /
+bytes / collective counts by roughly the trip count. We therefore report a
+``loop_scale`` correction = analytic_model_flops / (hlo_flops × chips),
+clamped ≥ 1, and scale all three roofline terms by it — per-iteration
+ratios are exact and the out-of-loop remainder is small. MODEL_FLOPS is the
+assignment's 6·N·D (3-pass train) / 2·N·D (inference) with N = active
+params.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch import analysis
+
+
+def load_results(out_dir: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | dev mem (GB) | flops/dev | "
+           "loop_scale | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP | - | - | - | - | - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR | - | - | - | - | - | - | - | - |")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]
+        dev_gb = sum(mem.get(k) or 0 for k in
+                     ("argument_bytes", "temp_bytes")) / 1e9
+        scale = 1.0
+        if rl["model_flops"] and rl["flops"]:
+            scale = max(1.0, rl["model_flops"] /
+                        (rl["flops"] * rl["chips"]))
+        comp = rl["compute_s"] * scale
+        memt = rl["memory_s"] * scale
+        coll = rl["collective_s"] * scale
+        dom = max((("compute", comp), ("memory", memt),
+                   ("collective", coll)), key=lambda kv: kv[1])[0]
+        useful = (rl["model_flops"] /
+                  max(rl["flops"] * rl["chips"] * scale, 1e-30)
+                  if rl["model_flops"] else float("nan"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {dev_gb:.1f} | {rl['flops']:.2e} | {scale:.1f} "
+            f"| {comp:.2e} | {memt:.2e} | {coll:.2e} | {dom} "
+            f"| {useful:.2f} |")
+    return "\n".join(out)
+
+
+def summarize(rows):
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    return {"ok": len(ok), "skipped": len(skip), "error": len(err),
+            "errors": [(r["arch"], r["shape"], r.get("error", "")[:120])
+                       for r in err]}
+
+
+if __name__ == "__main__":
+    rows = load_results()
+    print(render_table(rows))
+    print(summarize(rows))

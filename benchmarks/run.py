@@ -1,0 +1,67 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]`` prints
+``name,us_per_call,derived`` CSV rows plus the markdown report, and appends
+the report to results/paper_report.md. Roofline rows (if dry-run results
+exist) are summarized at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced workloads (CI-sized)")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import paper_tables
+
+    t0 = time.time()
+    report, results = paper_tables.run_all(fast=args.fast)
+    dt = time.time() - t0
+
+    # CSV contract: name,us_per_call,derived
+    print("name,us_per_call,derived")
+    for ds, res in results.items():
+        for k, rows in res.items():
+            t_tr = np.mean([r["t_trinit"] for r in rows]) * 1e6
+            t_sp = np.mean([r["t_specqp"] for r in rows]) * 1e6
+            prec = np.mean([r["prec"] for r in rows])
+            pull_ratio = (np.mean([r["pulled_t"] for r in rows]) /
+                          max(np.mean([r["pulled_s"] for r in rows]), 1))
+            print(f"table2_precision_{ds}_k{k},{t_sp:.0f},{prec:.3f}")
+            print(f"fig6_runtime_trinit_{ds}_k{k},{t_tr:.0f},1.0")
+            print(f"fig6_runtime_specqp_{ds}_k{k},{t_sp:.0f},"
+                  f"{t_tr/max(t_sp,1e-9):.2f}")
+            print(f"fig6_pull_ratio_{ds}_k{k},{t_sp:.0f},{pull_ratio:.2f}")
+            acc_rows = [r for r in rows]
+            exact = np.mean([r["plan_exact"] for r in acc_rows])
+            print(f"table3_prediction_{ds}_k{k},{t_sp:.0f},{exact:.3f}")
+            err = np.mean([r["err_mean"] for r in rows])
+            print(f"table4_score_err_{ds}_k{k},{t_sp:.0f},{err:.4f}")
+
+    print(report)
+    os.makedirs("results", exist_ok=True)
+    with open("results/paper_report.md", "w") as f:
+        f.write(report + f"\n\n(total bench time {dt:.0f}s)\n")
+
+    # Roofline summary if dry-run results exist.
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_results()
+        if rows:
+            print("\n### Dry-run/roofline summary")
+            print(roofline.summarize(rows))
+    except Exception as e:  # noqa: BLE001
+        print(f"(roofline summary unavailable: {e})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Spec-QP beyond the KG: speculative candidate-block pruning for dense
+retrieval (DESIGN.md §4). Builds a norm-clustered corpus (the realistic
+ANN layout), compares the speculative kernel against the score-everything
+baseline, and verifies exactness.
+
+    PYTHONPATH=src python examples/speculative_retrieval.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def main():
+    rng = np.random.default_rng(0)
+    D, tile, k = 128, 512, 10
+    n_tiles = 32
+    # Block-clustered magnitudes: popular items (large norms) first — the
+    # index-build-time analogue of the paper's score-sorted posting lists.
+    mags = np.repeat(np.geomspace(4.0, 0.1, n_tiles), tile)
+    cand = (rng.standard_normal((n_tiles * tile, D)) * mags[:, None]
+            / np.sqrt(D)).astype(np.float32)
+    q = rng.standard_normal(D).astype(np.float32)
+
+    cand_j, q_j = jnp.asarray(cand), jnp.asarray(q)
+    bounds = kops.block_bounds_cauchy(q_j, cand_j, tile)
+    inf_bounds = jnp.full_like(bounds, jnp.inf)
+
+    for name, b in (("speculative", bounds), ("baseline", inf_bounds)):
+        s, i, n = kops.topk_score_pruned(q_j, cand_j, b, k, tile)
+        jax.block_until_ready(s)
+        t0 = time.time()
+        s, i, n = kops.topk_score_pruned(q_j, cand_j, b, k, tile)
+        jax.block_until_ready(s)
+        dt = (time.time() - t0) * 1e3
+        print(f"{name:12s}: scored {int(n):3d}/{n_tiles} tiles "
+              f"in {dt:6.1f}ms  top-3 {np.asarray(i)[:3].tolist()}")
+
+    exact_s, exact_i = jax.lax.top_k(cand_j @ q_j, k)
+    s, i, n = kops.topk_score_pruned(q_j, cand_j, bounds, k, tile)
+    assert np.allclose(np.asarray(s), np.asarray(exact_s), rtol=1e-5)
+    print("speculative result == exact top-k ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution for every entrypoint."""
+from __future__ import annotations
+
+import importlib
+
+_ARCHS = {
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "egnn": "repro.configs.egnn",
+    "gat-cora": "repro.configs.gat_cora",
+    "nequip": "repro.configs.nequip",
+    "mace": "repro.configs.mace",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    # The paper's own engine as a first-class serving config (bonus arch).
+    "kg-specqp": "repro.configs.kg_specqp",
+}
+
+ASSIGNED_ARCHS = [a for a in _ARCHS if a != "kg-specqp"]
+
+
+def get_arch(name: str):
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_ARCHS)}")
+    return importlib.import_module(_ARCHS[name])
+
+
+def all_archs():
+    return list(_ARCHS)

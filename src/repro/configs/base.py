@@ -1,0 +1,112 @@
+"""Shared cell-construction machinery for the dry-run and launchers.
+
+A *cell* is one (architecture × input-shape) lowering target: a pure
+function + abstract argument specs (+ shardings when a mesh is installed).
+``lower()`` never allocates — params come from ``jax.eval_shape`` over the
+real initializers, inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    fn: Callable
+    args: tuple                    # pytrees of ShapeDtypeStruct
+    arg_axes: tuple                # mirror pytrees of logical-axis tuples/None
+    static_kwargs: dict | None = None
+
+    def shardings(self):
+        if not sharding.active():
+            return None
+
+        def to_shard(ax, leaf):
+            if isinstance(ax, tuple) and len(ax) == len(leaf.shape):
+                return sharding.sharding(*ax, shape=tuple(leaf.shape))
+            return sharding.sharding()
+
+        out = []
+        for ax_tree, arg_tree in zip(self.arg_axes, self.args):
+            out.append(jax.tree_util.tree_map(
+                to_shard, ax_tree, arg_tree,
+                is_leaf=lambda x: isinstance(x, tuple) or x is None))
+        return tuple(out)
+
+    def lower(self):
+        shard = self.shardings()
+        fn = self.fn
+        if shard is not None:
+            jitted = jax.jit(fn, in_shardings=shard)
+        else:
+            jitted = jax.jit(fn)
+        return jitted.lower(*self.args)
+
+
+def eval_shape_with_axes(init_fn, key):
+    """eval_shape an init returning (params, axes); axes captured statically."""
+    cap = {}
+
+    def run(k):
+        params, axes = init_fn(k)
+        cap["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(run, key)
+    return shapes, cap["axes"]
+
+
+def train_state_specs(init_fn, key, train_cfg: train_loop.TrainConfig):
+    """(state ShapeDtypeStruct tree, state axes tree) for a model init."""
+    p_shapes, p_axes = eval_shape_with_axes(init_fn, key)
+    mdt = jnp.dtype(train_cfg.opt.moment_dtype)
+    m_shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_shapes)
+    state = {"params": p_shapes,
+             "opt": {"m": m_shapes, "v": m_shapes,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    axes = {"params": p_axes,
+            "opt": {"m": p_axes, "v": p_axes, "step": ()}}
+    if train_cfg.compress_grads:
+        state["err_fb"] = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes)
+        axes["err_fb"] = p_axes
+    return state, axes
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def axes_like(tree, axes):
+    """Broadcast one logical-axes tuple over a whole pytree."""
+    return jax.tree_util.tree_map(lambda _: axes, tree)
+
+
+def cache_axes(cache_shapes):
+    """Logical axes for LM decode caches (per-run stacked dicts)."""
+    def leaf_axes(path, leaf):
+        key = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        nd = len(leaf.shape)
+        if key in ("k", "v"):          # (L, B, W, Hkv, Dh)
+            return ("layers", "batch", "kv_seq", "kv_heads", None)[:nd]
+        if key in ("c_kv", "k_rope"):  # (L, B, W, R)
+            return ("layers", "batch", "kv_seq", None)[:nd]
+        if key == "pos":               # (L, B, W)
+            return ("layers", "batch", "kv_seq")[:nd]
+        return tuple([None] * nd)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        tdef, [leaf_axes(p, l) for p, l in flat])

@@ -1,0 +1,56 @@
+"""deepseek-v3-671b [arXiv:2412.19437]: 61L, d_model 7168, 128H, MLA,
+MoE 256 routed (top-8) + 1 shared, d_ff_expert 2048 (dense prefix 18432),
+vocab 129280, MTP."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import lm_common
+from repro.models import transformer as tf
+from repro.models import attention, moe
+
+ARCH = "deepseek-v3-671b"
+FAMILY = "lm"
+SHAPES = list(lm_common.LM_SHAPES)
+SKIP_SHAPES = {
+    "long_500k": "pure full-span attention arch (MLA compresses the cache "
+                 "but every layer still attends to all 524k positions); "
+                 "skipped per the assignment's full-attention rule.",
+}
+
+
+def config() -> tf.LMConfig:
+    return tf.LMConfig(
+        name=ARCH, n_layers=61, d_model=7168, n_heads=128, n_kv=128,
+        head_dim=128, d_ff=18432, vocab=129_280,
+        mla=attention.MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                                qk_nope_head_dim=128, qk_rope_head_dim=64,
+                                v_head_dim=128),
+        moe=moe.MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048,
+                          n_shared=1, capacity_factor=1.25,
+                          shard_experts=True),
+        first_dense_layers=3, mtp_depth=1, tie_embeddings=False,
+        rope_theta=10_000.0, param_dtype="bfloat16", remat="full",
+        moe_chunk=4096)
+
+
+def smoke_config() -> tf.LMConfig:
+    return dataclasses.replace(
+        config(), n_layers=4, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=256, vocab=512,
+        mla=attention.MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                v_head_dim=16),
+        moe=moe.MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared=1,
+                          capacity_factor=2.0, shard_experts=True),
+        first_dense_layers=1, param_dtype="float32",
+        compute_dtype="float32", attn_chunk_q=16, attn_chunk_k=16,
+        moe_chunk=64)
+
+
+def make_cell(shape: str):
+    return lm_common.make_cell(ARCH, config(), shape)
+
+
+def smoke():
+    return lm_common.smoke_run(smoke_config())

@@ -1,0 +1,102 @@
+"""Cell builders shared by the four GNN architectures.
+
+Shapes (assignment): full_graph_sm (cora-scale full batch), minibatch_lg
+(reddit-scale sampled subgraph — the padded output of the fanout-15-10
+neighbor sampler), ogb_products (products-scale full batch), molecule
+(128 batched 30-node graphs). Non-geometric shapes feed the geometric
+models synthesized positions via input_specs (modality-stub rule,
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.gnn.graph import Graph
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt_lib
+
+# minibatch_lg padded sizes: 1024 seeds × fanout (15, 10) ⇒
+# ≤ 1024·(1+15+150) nodes, ≤ 1024·(15+150) edges.
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                          task="node_class", n_classes=7),
+    "minibatch_lg": dict(n_nodes=169_984, n_edges=168_960, d_feat=602,
+                         task="node_class", n_classes=41),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                         task="node_class", n_classes=47),
+    "molecule": dict(n_nodes=30 * 128, n_edges=64 * 128, d_feat=16,
+                     task="graph_reg", n_graphs=128),
+}
+
+TRAIN_CFG = train_loop.TrainConfig(opt=opt_lib.AdamWConfig(lr=1e-3))
+
+
+def graph_specs(shape: dict, geometric: bool):
+    N, E = shape["n_nodes"], shape["n_edges"]
+    task = shape["task"]
+    return Graph(
+        node_feat=base.spec((N, shape["d_feat"]), jnp.float32),
+        positions=base.spec((N, 3), jnp.float32) if geometric else None,
+        edge_src=base.spec((E,), jnp.int32),
+        edge_dst=base.spec((E,), jnp.int32),
+        node_mask=base.spec((N,), jnp.bool_),
+        labels=base.spec((shape.get("n_graphs", N),),
+                         jnp.float32 if task == "graph_reg" else jnp.int32),
+        graph_ids=base.spec((N,), jnp.int32)
+        if task == "graph_reg" else None,
+    )
+
+
+def graph_axes(shape: dict, geometric: bool):
+    task = shape["task"]
+    return Graph(
+        node_feat=("graph_nodes", None),
+        positions=("graph_nodes", None) if geometric else None,
+        edge_src=("graph_edges",),
+        edge_dst=("graph_edges",),
+        node_mask=("graph_nodes",),
+        labels=(None,),
+        graph_ids=("graph_nodes",) if task == "graph_reg" else None,
+    )
+
+
+def make_cell(arch: str, model_mod, cfg, shape_name: str,
+              geometric: bool,
+              train_cfg: train_loop.TrainConfig = TRAIN_CFG) -> base.CellSpec:
+    sh = GNN_SHAPES[shape_name]
+    cfg = dataclasses.replace(
+        cfg, d_in=sh["d_feat"], task=sh["task"],
+        n_classes=sh.get("n_classes", 1))
+    key = jax.random.PRNGKey(0)
+    init_fn = lambda k: model_mod.init(k, cfg)
+    state, state_axes = base.train_state_specs(init_fn, key, train_cfg)
+    loss = lambda p, g: model_mod.loss_fn(p, cfg, g)
+    step = train_loop.make_train_step(loss, train_cfg)
+    g_spec = graph_specs(sh, geometric)
+    g_axes = graph_axes(sh, geometric)
+    return base.CellSpec(arch, shape_name, "train", step,
+                         (state, g_spec), (state_axes, g_axes))
+
+
+def smoke_run(model_mod, cfg, geometric: bool, seed: int = 0):
+    """One real CPU train step on a tiny random graph."""
+    from repro.data import graph_synth
+    if cfg.task == "graph_reg":
+        g = graph_synth.molecule_batch(4, 12, 24, d_feat=cfg.d_in,
+                                       seed=seed)
+    else:
+        g = graph_synth.random_graph(64, 256, cfg.d_in,
+                                     n_classes=cfg.n_classes, seed=seed,
+                                     geometric=True)
+    key = jax.random.PRNGKey(seed)
+    params, _ = model_mod.init(key, cfg)
+    tc = train_loop.TrainConfig(opt=opt_lib.AdamWConfig(lr=1e-3))
+    state = train_loop.make_train_state(params, tc)
+    step = jax.jit(train_loop.make_train_step(
+        lambda p, gg: model_mod.loss_fn(p, cfg, gg), tc))
+    state, metrics = step(state, g)
+    return metrics

@@ -1,0 +1,103 @@
+"""Cell builders shared by the five LM architectures.
+
+Shapes (assignment): train_4k (train_step), prefill_32k (prefill),
+decode_32k / long_500k (serve_step: one token against an S-long KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models import transformer as tf
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt_lib
+
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+TRAIN_CFG = train_loop.TrainConfig(
+    opt=opt_lib.AdamWConfig(lr=3e-4, moment_dtype="bfloat16"))
+
+
+def make_cell(arch: str, cfg: tf.LMConfig, shape_name: str,
+              train_cfg: train_loop.TrainConfig = TRAIN_CFG) -> base.CellSpec:
+    sh = LM_SHAPES[shape_name]
+    S, B, kind = sh["seq"], sh["batch"], sh["kind"]
+    key = jax.random.PRNGKey(0)
+    init_fn = lambda k: tf.init(k, cfg)
+
+    if kind == "train":
+        state, state_axes = base.train_state_specs(init_fn, key, train_cfg)
+        loss = lambda p, b: tf.loss_fn(p, cfg, b["tokens"], b["labels"])
+        step = train_loop.make_train_step(loss, train_cfg)
+        batch = {"tokens": base.spec((B, S), jnp.int32),
+                 "labels": base.spec((B, S), jnp.int32)}
+        batch_axes = {"tokens": ("batch", "seq"),
+                      "labels": ("batch", "seq")}
+        return base.CellSpec(arch, shape_name, kind, step,
+                             (state, batch), (state_axes, batch_axes))
+
+    p_shapes, p_axes = base.eval_shape_with_axes(init_fn, key)
+
+    if kind == "prefill":
+        fn = partial(_prefill, cfg=cfg, max_seq=S)
+        tokens = base.spec((B, S), jnp.int32)
+        return base.CellSpec(arch, shape_name, kind, fn,
+                             (p_shapes, tokens),
+                             (p_axes, ("batch", "seq")))
+
+    # decode: build cache specs from a short-prompt eval_shape of prefill.
+    prompt = base.spec((B, 16), jnp.int32)
+    _, cache_shapes = jax.eval_shape(
+        lambda p, t: tf.prefill(p, cfg, t, max_seq=S), p_shapes, prompt)
+    caches_axes = base.cache_axes(cache_shapes)
+    fn = partial(_decode, cfg=cfg)
+    token = base.spec((B,), jnp.int32)
+    pos = base.spec((B,), jnp.int32)
+    step_c = base.spec((), jnp.int32)
+    return base.CellSpec(
+        arch, shape_name, kind, fn,
+        (p_shapes, token, pos, cache_shapes, step_c),
+        (p_axes, ("batch",), ("batch",), caches_axes, ()))
+
+
+def _prefill(params, tokens, *, cfg, max_seq):
+    return tf.prefill(params, cfg, tokens, max_seq)
+
+
+def _decode(params, token, pos, caches, step, *, cfg):
+    return tf.decode_step(params, cfg, token, pos, caches, step)
+
+
+def smoke_run(cfg: tf.LMConfig, seq: int = 32, batch: int = 2,
+              seed: int = 0):
+    """One CPU train step + one decode step on a reduced config.
+
+    Returns (train metrics, decode logits) — smoke tests assert finiteness
+    and shapes.
+    """
+    key = jax.random.PRNGKey(seed)
+    params, _ = tf.init(key, cfg)
+    tc = train_loop.TrainConfig(opt=opt_lib.AdamWConfig(lr=1e-3))
+    state = train_loop.make_train_state(params, tc)
+    loss = lambda p, b: tf.loss_fn(p, cfg, b["tokens"], b["labels"])
+    step = jax.jit(train_loop.make_train_step(loss, tc))
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab)
+    batch_d = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    state, metrics = step(state, batch_d)
+
+    logits_pf, caches = tf.prefill(state["params"], cfg, toks,
+                                   max_seq=seq + 8)
+    nxt = jnp.argmax(logits_pf[:, -1], -1).astype(jnp.int32)
+    logits, _ = tf.decode_step(state["params"], cfg, nxt,
+                               jnp.full((batch,), seq, jnp.int32), caches,
+                               jnp.int32(seq))
+    return metrics, logits

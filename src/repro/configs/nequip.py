@@ -1,0 +1,32 @@
+"""nequip [arXiv:2101.03164]: 5 layers, 32 channels, l_max 2, 8 RBF,
+cutoff 5, E(3) tensor-product message passing."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import gnn_common
+from repro.models.gnn import nequip as model
+
+ARCH = "nequip"
+FAMILY = "gnn"
+SHAPES = list(gnn_common.GNN_SHAPES)
+SKIP_SHAPES: dict[str, str] = {}
+GEOMETRIC = True
+
+
+def config() -> model.NequIPConfig:
+    return model.NequIPConfig(name=ARCH, n_layers=5, d_hidden=32, l_max=2,
+                              n_rbf=8, cutoff=5.0)
+
+
+def smoke_config() -> model.NequIPConfig:
+    return dataclasses.replace(config(), d_hidden=8, n_layers=2, d_in=8)
+
+
+def make_cell(shape: str):
+    return gnn_common.make_cell(ARCH, model, config(), shape, GEOMETRIC)
+
+
+def smoke():
+    cfg = dataclasses.replace(smoke_config(), d_in=8, task="graph_reg")
+    return gnn_common.smoke_run(model, cfg, GEOMETRIC)

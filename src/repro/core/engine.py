@@ -1,0 +1,220 @@
+"""Query engines: TriniT (non-speculative baseline), Spec-QP, and oracles.
+
+One mask-parameterized executor serves both engines (DESIGN.md §2): the plan
+is a boolean per triple pattern saying whether its relaxations join the
+merge; TriniT is the all-True plan, Spec-QP uses PLANGEN's speculation.
+The executor is an n-ary bound-driven rank join over blockwise incremental
+merges, carried entirely through ``lax.while_loop`` so the whole query
+(planning included) jits and vmaps.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (TripleStore, RelaxTable, EngineResult,
+                              EngineConfig, PAD_KEY, NEG_INF)
+from repro.core import operators as ops
+from repro.core import plangen
+
+
+class _LoopState(NamedTuple):
+    cursors: jax.Array      # (T, R1)
+    seen_keys: jax.Array    # (T, N)
+    seen_scores: jax.Array  # (T, N)
+    seen_cnt: jax.Array     # (T,)
+    top_keys: jax.Array     # (k,)
+    top_scores: jax.Array   # (k,)
+    n_pulled: jax.Array
+    n_answers: jax.Array
+    n_iters: jax.Array
+    done: jax.Array
+
+
+def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
+    """Run the n-ary rank join to completion. Returns final _LoopState."""
+    T, R1, L = streams.keys.shape
+    B = cfg.block
+    N = R1 * L + 2 * B
+    if cfg.seen_cap:
+        N = min(N, max(cfg.seen_cap, 2 * B))
+    k = cfg.k
+
+    stream_max = jnp.max(
+        jnp.where(streams.lengths > 0, streams.scores[:, :, 0], NEG_INF),
+        axis=1)                                                 # (T,)
+    stream_max = jnp.where(streams.stream_active, stream_max, NEG_INF)
+    active = streams.stream_active
+    sum_max = jnp.sum(jnp.where(active, stream_max, 0.0))
+
+    max_iters = T * (R1 * L // B + 2)
+
+    def head_scores(cursors):
+        return jax.vmap(ops.merged_head_score)(
+            streams.keys, streams.scores, streams.lengths, cursors)
+
+    def body(st: _LoopState) -> _LoopState:
+        nxt = head_scores(st.cursors)                           # (T,)
+        nxt = jnp.where(active, nxt, NEG_INF)
+        t_star = jnp.argmax(nxt)
+
+        blk_k, blk_s, new_cur_t = ops.pull_block(
+            streams.keys[t_star], streams.scores[t_star],
+            streams.lengths[t_star], st.cursors[t_star], B)
+        n_taken = jnp.sum(blk_k != PAD_KEY)
+        blk_k, blk_s = ops.dedup_block(blk_k, blk_s)
+        # Drop keys this stream already emitted (earlier pull ⇒ ≥ score).
+        _, seen_before = ops.lookup_scores(
+            st.seen_keys[t_star], st.seen_scores[t_star], blk_k,
+            st.seen_cnt[t_star], cfg.use_pallas, cfg.pallas_interpret)
+        blk_k = jnp.where(seen_before, PAD_KEY, blk_k)
+        blk_s = jnp.where(seen_before, NEG_INF, blk_s)
+
+        # Join the fresh block against every other stream's seen buffer.
+        def probe(j):
+            s, f = ops.lookup_scores(
+                st.seen_keys[j], st.seen_scores[j], blk_k, st.seen_cnt[j],
+                cfg.use_pallas, cfg.pallas_interpret)
+            return s, f
+        s_j, f_j = jax.vmap(probe)(jnp.arange(T))               # (T, B)
+        others = active & (jnp.arange(T) != t_star)
+        contrib = jnp.sum(jnp.where(others[:, None], s_j, 0.0), axis=0)
+        matched = jnp.all(jnp.where(others[:, None], f_j, True), axis=0)
+        cand_ok = matched & (blk_k != PAD_KEY)
+        cand_scores = jnp.where(cand_ok, blk_s + contrib, NEG_INF)
+        cand_keys = jnp.where(cand_ok, blk_k, PAD_KEY)
+        top_keys, top_scores = ops.topk_insert(
+            st.top_keys, st.top_scores, cand_keys, cand_scores, k)
+
+        # Append the block to t*'s seen buffer (fixed B slots per pull;
+        # wraps as a ring when a seen_cap is configured).
+        def append(t):
+            start = st.seen_cnt[t] % jnp.int32(max(N - B, B))
+            upd_k = jax.lax.dynamic_update_slice(
+                st.seen_keys[t], blk_k, (start,))
+            upd_s = jax.lax.dynamic_update_slice(
+                st.seen_scores[t], jnp.where(blk_s == NEG_INF, 0.0, blk_s),
+                (start,))
+            sel = t == t_star
+            return (jnp.where(sel, upd_k, st.seen_keys[t]),
+                    jnp.where(sel, upd_s, st.seen_scores[t]))
+        seen_keys, seen_scores = jax.vmap(append)(jnp.arange(T))
+        seen_cnt = st.seen_cnt + jnp.where(
+            jnp.arange(T) == t_star, B, 0).astype(jnp.int32)
+        cursors = jax.vmap(
+            lambda t, nc: jnp.where(t == t_star, nc, st.cursors[t]),
+            in_axes=(0, None))(jnp.arange(T), new_cur_t)
+
+        # HRJN-style n-ary corner bound for any undiscovered answer.
+        nxt2 = head_scores(cursors)
+        nxt2 = jnp.where(active, nxt2, NEG_INF)
+        tau = jnp.max(nxt2 + (sum_max - jnp.where(active, stream_max, 0.0)))
+        kth = top_scores[k - 1]
+        exhausted = jnp.all(nxt2 == NEG_INF)
+        done = (kth >= tau) | exhausted
+
+        return _LoopState(
+            cursors=cursors, seen_keys=seen_keys, seen_scores=seen_scores,
+            seen_cnt=seen_cnt, top_keys=top_keys, top_scores=top_scores,
+            n_pulled=st.n_pulled + n_taken.astype(jnp.int32),
+            n_answers=st.n_answers + jnp.sum(cand_ok).astype(jnp.int32),
+            n_iters=st.n_iters + 1, done=done)
+
+    init = _LoopState(
+        cursors=jnp.zeros((T, R1), jnp.int32),
+        seen_keys=jnp.full((T, N), PAD_KEY, jnp.int32),
+        seen_scores=jnp.zeros((T, N), jnp.float32),
+        seen_cnt=jnp.zeros((T,), jnp.int32),
+        top_keys=jnp.full((k,), PAD_KEY, jnp.int32),
+        top_scores=jnp.full((k,), NEG_INF, jnp.float32),
+        n_pulled=jnp.int32(0), n_answers=jnp.int32(0),
+        n_iters=jnp.int32(0), done=jnp.array(False))
+
+    final = jax.lax.while_loop(
+        lambda s: (~s.done) & (s.n_iters < max_iters), body, init)
+    return final
+
+
+@partial(jax.jit, static_argnames=("cfg", "mode"))
+def run_query(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
+              cfg: EngineConfig, mode: str = "specqp") -> EngineResult:
+    """Answer one star query. mode ∈ {"trinit", "specqp", "join_only"}."""
+    if mode == "trinit":
+        mask = plangen.trinit_plan(pattern_ids)
+    elif mode == "specqp":
+        mask = plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins)
+    elif mode == "join_only":
+        mask = jnp.zeros_like(pattern_ids, dtype=bool)
+    else:
+        raise ValueError(mode)
+    streams = ops.gather_streams(store, relax, pattern_ids, mask)
+    st = _execute(streams, cfg)
+    return EngineResult(
+        keys=st.top_keys, scores=st.top_scores, n_pulled=st.n_pulled,
+        n_answers=st.n_answers, n_iters=st.n_iters, relax_mask=mask)
+
+
+@partial(jax.jit, static_argnames=("cfg", "mode"))
+def run_query_batch(store, relax, pattern_ids_batch, cfg: EngineConfig,
+                    mode: str = "specqp") -> EngineResult:
+    """vmap of run_query over a (Q, T) batch of star queries."""
+    return jax.vmap(
+        lambda pids: run_query.__wrapped__(store, relax, pids, cfg, mode)
+    )(pattern_ids_batch)
+
+
+@partial(jax.jit, static_argnames=("k", "n_entities"))
+def naive_full_scan(store: TripleStore, relax: RelaxTable,
+                    pattern_ids: jax.Array, k: int, n_entities: int,
+                    relax_mask: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Exact oracle (and the paper-intro naive baseline): materialize every
+    relaxed answer and sort. Per pattern, an answer key's contribution is the
+    max weighted score over {original} ∪ relaxations (Definition 8's max over
+    rewritings distributes over the star-join sum).
+
+    ``relax_mask`` (T,) optionally disables relaxations per pattern — used
+    to compute which patterns TRULY require relaxation (Table 3 ground
+    truth)."""
+    T = pattern_ids.shape[0]
+    R = relax.ids.shape[1]
+    active = pattern_ids != PAD_KEY
+    safe_pid = jnp.where(active, pattern_ids, 0)
+    if relax_mask is None:
+        relax_mask = jnp.ones((T,), bool)
+
+    def best_per_key(pid, use_relax):
+        rel_ids = jnp.where(use_relax, relax.ids[pid], PAD_KEY)
+        rel_w = relax.weights[pid]
+        src_ids = jnp.concatenate([pid[None], jnp.where(
+            rel_ids == PAD_KEY, 0, rel_ids)])
+        weights = jnp.concatenate([jnp.ones((1,), jnp.float32), rel_w])
+        src_ok = jnp.concatenate([jnp.array([True]), rel_ids != PAD_KEY])
+        best = jnp.full((n_entities,), NEG_INF, jnp.float32)
+        present = jnp.zeros((n_entities,), bool)
+
+        def body(carry, r):
+            best, present = carry
+            keys = store.keys[src_ids[r]]
+            sc = store.scores[src_ids[r]] * weights[r]
+            ok = (keys != PAD_KEY) & src_ok[r]
+            idx = jnp.where(ok, keys, 0)
+            best = best.at[idx].max(jnp.where(ok, sc, NEG_INF))
+            present = present.at[idx].max(ok)
+            return (best, present), None
+
+        (best, present), _ = jax.lax.scan(
+            body, (best, present), jnp.arange(R + 1))
+        return jnp.where(present, best, NEG_INF), present
+
+    best_t, present_t = jax.vmap(best_per_key)(safe_pid, relax_mask)
+    all_present = jnp.all(present_t | ~active[:, None], axis=0)
+    total = jnp.sum(jnp.where(active[:, None], jnp.where(
+        present_t, best_t, 0.0), 0.0), axis=0)
+    total = jnp.where(all_present, total, NEG_INF)
+    top_s, top_i = jax.lax.top_k(total, k)
+    top_keys = jnp.where(top_s > NEG_INF, top_i.astype(jnp.int32), PAD_KEY)
+    return top_keys, top_s

@@ -1,0 +1,133 @@
+"""Expected-score estimator (§3.1): join cardinalities + order statistics.
+
+Cardinalities use *exact* join selectivities like the paper (footnote 3):
+for star joins on a shared variable the join cardinality is the size of the
+intersection of the per-pattern key sets, which we compute with vectorized
+binary searches over the key-sorted copies kept in the store.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TripleStore, RelaxTable, PAD_KEY, KEY_SENTINEL
+from repro.core import histogram
+
+
+def member(sorted_keys: jax.Array, probes: jax.Array) -> jax.Array:
+    """probes ∈ sorted_keys (ascending, KEY_SENTINEL padded) → (N,) bool."""
+    idx = jnp.searchsorted(sorted_keys, probes, side="left")
+    idx = jnp.clip(idx, 0, sorted_keys.shape[0] - 1)
+    found = sorted_keys[idx] == probes
+    return found & (probes != PAD_KEY) & (probes != KEY_SENTINEL)
+
+
+def star_join_cardinality(store: TripleStore, pattern_ids: jax.Array,
+                          active: jax.Array) -> jax.Array:
+    """|∩_t keys(q_t)| over the active patterns of a star query.
+
+    pattern_ids: (T,) int32 (entries with active=False ignored).
+    Returns () f32 cardinality.
+    """
+    base_id = pattern_ids[0]
+    base_keys = store.keys[base_id]          # (L,) score-ordered; any order ok
+    valid = base_keys != PAD_KEY
+
+    def body(mask, t):
+        pid = pattern_ids[t]
+        m = member(store.sorted_keys[pid], base_keys)
+        return jnp.where(active[t], mask & m, mask), None
+
+    T = pattern_ids.shape[0]
+    mask, _ = jax.lax.scan(body, valid, jnp.arange(1, T))
+    mask = mask & jnp.where(active[0], True, False)  # active[0] always True by convention
+    return jnp.sum(mask.astype(jnp.float32))
+
+
+def relaxed_join_cardinality(store: TripleStore, pattern_ids: jax.Array,
+                             active: jax.Array, t_relax: jax.Array,
+                             relax_id: jax.Array) -> jax.Array:
+    """Cardinality of the query with pattern ``t_relax`` replaced by ``relax_id``.
+
+    Uses the relaxed list as the probe base so the swap works for any t.
+    """
+    base_keys = store.keys[relax_id]
+    valid = base_keys != PAD_KEY
+
+    def body(mask, t):
+        pid = pattern_ids[t]
+        m = member(store.sorted_keys[pid], base_keys)
+        skip = (t == t_relax) | ~active[t]
+        return jnp.where(skip, mask, mask & m), None
+
+    T = pattern_ids.shape[0]
+    mask, _ = jax.lax.scan(body, valid, jnp.arange(T))
+    has_relax = relax_id != PAD_KEY
+    return jnp.where(has_relax, jnp.sum(mask.astype(jnp.float32)), 0.0)
+
+
+def exact_cardinalities(store: TripleStore, relax: RelaxTable,
+                        pattern_ids: jax.Array, active: jax.Array):
+    """(n, n_rel (T,)) — original and per-top-relaxation join cardinalities.
+
+    Purely local to the store it is given; under hash partitioning the
+    global cardinality is the ``psum`` of per-shard values (a key's triples
+    for every pattern live on one shard).
+    """
+    T = pattern_ids.shape[0]
+    safe_ids = jnp.where(pattern_ids == PAD_KEY, 0, pattern_ids)
+    n = star_join_cardinality(store, safe_ids, active)
+
+    def per_pattern(t):
+        pid = safe_ids[t]
+        rid = relax.ids[pid, 0]
+        return relaxed_join_cardinality(store, safe_ids, active, t, rid)
+
+    n_rel = jax.vmap(per_pattern)(jnp.arange(T))
+    return n, n_rel
+
+
+def score_estimates_from_cards(stats_table: jax.Array, relax: RelaxTable,
+                               pattern_ids: jax.Array, active: jax.Array,
+                               n: jax.Array, n_rel: jax.Array,
+                               k: int, G: int):
+    """E_Q(k) and per-pattern E_Q'(1) given (possibly psum'd) cardinalities.
+
+    ``stats_table`` is the *global* (P, 4) statistics array — tiny and
+    replicated in the distributed engine.
+    """
+    T = pattern_ids.shape[0]
+    safe_ids = jnp.where(pattern_ids == PAD_KEY, 0, pattern_ids)
+    stats = stats_table[safe_ids]                      # (T, 4)
+    pmfs = jax.vmap(lambda s: histogram.pattern_pmf(s, 1.0, G))(stats)
+
+    pmf_q = histogram.convolve_pmfs(pmfs, active)
+    e_qk = histogram.expected_order_statistic(pmf_q, n, jnp.float32(k), G)
+
+    def per_pattern(t):
+        pid = safe_ids[t]
+        rid = relax.ids[pid, 0]
+        w = relax.weights[pid, 0]
+        safe_rid = jnp.where(rid == PAD_KEY, 0, rid)
+        relaxed_pmf = histogram.pattern_pmf(stats_table[safe_rid], w, G)
+        pmfs_mod = pmfs.at[t].set(relaxed_pmf)
+        pmf_qr = histogram.convolve_pmfs(pmfs_mod, active)
+        e1 = histogram.expected_order_statistic(
+            pmf_qr, n_rel[t], jnp.float32(1.0), G)
+        usable = (rid != PAD_KEY) & active[t]
+        return jnp.where(usable, e1, -jnp.inf)
+
+    e_q1 = jax.vmap(per_pattern)(jnp.arange(T))
+    return e_qk, e_q1
+
+
+def query_score_estimates(store: TripleStore, relax: RelaxTable,
+                          pattern_ids: jax.Array, active: jax.Array,
+                          k: int, G: int):
+    """E_Q(k) for the original query and E_Q'(1) per top-relaxed pattern.
+
+    Returns (e_qk: (), e_q1_relaxed: (T,)) — the quantities PLANGEN compares.
+    """
+    n, n_rel = exact_cardinalities(store, relax, pattern_ids, active)
+    return score_estimates_from_cards(
+        store.stats, relax, pattern_ids, active, n, n_rel, k, G)

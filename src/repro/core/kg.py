@@ -1,0 +1,108 @@
+"""Knowledge-graph ingest: build a TripleStore + RelaxTable from host data.
+
+The ingest path is host-side numpy (this is the "database load" phase); the
+result is a pytree of device arrays that every engine entry point consumes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.types import TripleStore, RelaxTable, PAD_KEY, KEY_SENTINEL
+
+
+def compute_pattern_stats(scores: np.ndarray, length: int) -> np.ndarray:
+    """The paper's four statistics (m, sigma_r, S_r, S_m) for one pattern.
+
+    ``scores`` must be sorted descending and normalized to [0, 1].
+    r is the smallest rank whose cumulative score mass reaches 80 % of the
+    total (§3.1.1 two-bucket model / 80-20 rule).
+    """
+    m = float(length)
+    if length == 0:
+        return np.array([0.0, 0.5, 0.0, 0.0], dtype=np.float32)
+    s = scores[:length].astype(np.float64)
+    total = float(s.sum())
+    if total <= 0.0:
+        return np.array([m, 0.5, 0.0, 0.0], dtype=np.float32)
+    cum = np.cumsum(s)
+    r = int(np.searchsorted(cum, 0.8 * total, side="left"))
+    r = min(r, length - 1)
+    sigma_r = float(s[r])
+    # Degenerate guard: sigma must be strictly inside (0, 1) for the
+    # two-bucket pdf to be well defined.
+    sigma_r = min(max(sigma_r, 1e-4), 1.0 - 1e-4)
+    S_r = float(cum[r])
+    return np.array([m, sigma_r, S_r, total], dtype=np.float32)
+
+
+def build_store(pattern_lists: list[tuple[np.ndarray, np.ndarray]],
+                list_len: int | None = None,
+                normalize: bool = True) -> TripleStore:
+    """Build a TripleStore from per-pattern (keys, raw_scores) host arrays.
+
+    Scores are normalized per Definition 5 (divide by the list max) unless
+    ``normalize=False`` (used by the sharded build, where normalization by
+    the *global* max already happened). Lists are sorted by score desc and
+    padded to a common length.
+    """
+    P = len(pattern_lists)
+    if list_len is None:
+        list_len = max((len(k) for k, _ in pattern_lists), default=1)
+        list_len = max(list_len, 1)
+    keys = np.full((P, list_len), int(PAD_KEY), dtype=np.int32)
+    scores = np.zeros((P, list_len), dtype=np.float32)
+    sorted_keys = np.full((P, list_len), int(KEY_SENTINEL), dtype=np.int32)
+    lengths = np.zeros((P,), dtype=np.int32)
+    stats = np.zeros((P, 4), dtype=np.float32)
+
+    for p, (k, s) in enumerate(pattern_lists):
+        k = np.asarray(k, dtype=np.int32)
+        s = np.asarray(s, dtype=np.float64)
+        assert len(k) == len(s)
+        assert len(k) <= list_len, (len(k), list_len)
+        if len(np.unique(k)) != len(k):
+            raise ValueError(f"pattern {p}: keys must be unique within a list")
+        n = len(k)
+        lengths[p] = n
+        if n:
+            mx = s.max()
+            if not normalize:
+                mx = 1.0
+            sn = (s / mx if mx > 0 else s).astype(np.float32)
+            order = np.argsort(-sn, kind="stable")
+            keys[p, :n] = k[order]
+            scores[p, :n] = sn[order]
+            sorted_keys[p, :n] = np.sort(k)
+            stats[p] = compute_pattern_stats(scores[p], n)
+        else:
+            stats[p] = compute_pattern_stats(scores[p], 0)
+
+    return TripleStore(
+        keys=jnp.asarray(keys),
+        scores=jnp.asarray(scores),
+        lengths=jnp.asarray(lengths),
+        sorted_keys=jnp.asarray(sorted_keys),
+        stats=jnp.asarray(stats),
+    )
+
+
+def build_relax_table(P: int,
+                      rules: dict[int, list[tuple[int, float]]],
+                      max_relax: int | None = None) -> RelaxTable:
+    """Build a RelaxTable from {pattern: [(relaxed_pattern, weight), ...]}.
+
+    Relaxations are sorted by weight descending (PLANGEN inspects index 0).
+    """
+    if max_relax is None:
+        max_relax = max((len(v) for v in rules.values()), default=1)
+        max_relax = max(max_relax, 1)
+    ids = np.full((P, max_relax), int(PAD_KEY), dtype=np.int32)
+    weights = np.zeros((P, max_relax), dtype=np.float32)
+    for p, rl in rules.items():
+        rl = sorted(rl, key=lambda t: -t[1])[:max_relax]
+        for j, (q2, w) in enumerate(rl):
+            assert 0.0 <= w <= 1.0
+            ids[p, j] = q2
+            weights[p, j] = w
+    return RelaxTable(ids=jnp.asarray(ids), weights=jnp.asarray(weights))

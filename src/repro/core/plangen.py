@@ -1,0 +1,43 @@
+"""PLANGEN (Algorithm 1): speculative selection of patterns to relax.
+
+For each triple pattern q_i the planner builds the score distribution of the
+query with q_i replaced by its *top-weighted* relaxation and compares the
+expected best relaxed score E_Q'(1) with the expected k-th score of the
+original query E_Q(k). Patterns whose relaxations can break into the top-k
+become singletons (processed with Incremental Merge); the rest form the join
+group (plain rank joins).
+
+The returned plan is a boolean mask over the query's patterns — our executor
+is mask-parameterized, so TriniT is simply the all-True plan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TripleStore, RelaxTable, PAD_KEY
+from repro.core import estimator
+
+
+def plan(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
+         k: int, G: int = 512) -> jax.Array:
+    """Generate the speculative plan for one star query.
+
+    Args:
+      pattern_ids: (T,) int32 pattern ids (PAD_KEY padded for shorter queries).
+      k: top-k target (static).
+      G: histogram grid bins per unit score (static).
+
+    Returns:
+      (T,) bool — True where the pattern's relaxations must be processed.
+    """
+    active = pattern_ids != PAD_KEY
+    e_qk, e_q1 = estimator.query_score_estimates(
+        store, relax, pattern_ids, active, k, G)
+    need_relax = e_q1 > e_qk
+    return need_relax & active
+
+
+def trinit_plan(pattern_ids: jax.Array) -> jax.Array:
+    """The non-speculative baseline: every pattern processes its relaxations."""
+    return pattern_ids != PAD_KEY

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused weighted embedding-bag (gather + segment-sum).
+
+JAX has no native EmbeddingBag; the XLA fallback is take + segment_sum with
+an (B, S, D) intermediate in HBM. This kernel never materializes it: the
+scalar-prefetched bag ids drive the *table BlockSpec index map*, so each
+(bag, slot) grid step DMAs exactly one table row into VMEM and accumulates
+into the bag's output row. Rows arrive via double-buffered DMA — the
+classic Pallas embedding-gather pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, w_ref, table_row_ref, out_ref):
+    b, s = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = ids_ref[b, s] >= 0
+    w = jnp.where(valid, w_ref[...][0, 0], 0.0)
+    out_ref[...] += w * table_row_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table: jax.Array, ids: jax.Array, weights: jax.Array,
+                  interpret: bool = True) -> jax.Array:
+    """out[b] = Σ_s weights[b,s] * table[ids[b,s]]  (ids < 0 → skipped).
+
+    table: (V, D) f32; ids: (B, S) int32; weights: (B, S) f32 → (B, D).
+    """
+    B, S = ids.shape
+    V, D = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, S),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, s, ids_ref: (b, s)),
+            pl.BlockSpec(
+                (1, D), lambda b, s, ids_ref: (jnp.maximum(ids_ref[b, s], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, s, ids_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(ids, weights, table)

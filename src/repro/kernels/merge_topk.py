@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: weighted K-list merge pull (Incremental Merge step).
+
+Takes the R source windows (keys, weight-scaled scores) of one merged
+stream and emits the top-``block`` items by score — one bitonic sweep over
+VMEM registers instead of B priority-queue pops. Padding entries carry
+-inf scores and fall out of the prefix naturally.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sortnet import bitonic_topk_desc
+
+PAD_KEY = -1
+
+
+def _merge_kernel(keys_ref, scores_ref, out_k_ref, out_s_ref, *, block: int):
+    keys = keys_ref[...].reshape(1, -1)          # (1, Lp)
+    scores = scores_ref[...].reshape(1, -1)      # (1, Lp)
+    s_sorted, k_sorted = bitonic_topk_desc(scores, keys)
+    out_k_ref[...] = k_sorted[:, :block]
+    out_s_ref[...] = s_sorted[:, :block]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def merge_topk(window_keys: jax.Array, window_scores: jax.Array,
+               block: int, interpret: bool = True):
+    """Pallas-backed merged-stream pull. window_*: (R, W).
+
+    Returns (keys (block,), scores (block,)) sorted descending.
+    """
+    flat_k = window_keys.reshape(-1)
+    flat_s = window_scores.reshape(-1)
+    L = flat_k.shape[0]
+    Lp = 1 << max(int(L - 1).bit_length(), int(block - 1).bit_length(), 3)
+    if Lp < L:
+        Lp <<= 1
+    pad = Lp - L
+    if pad:
+        flat_k = jnp.pad(flat_k, (0, pad), constant_values=PAD_KEY)
+        flat_s = jnp.pad(flat_s, (0, pad), constant_values=-jnp.inf)
+
+    out_k, out_s = pl.pallas_call(
+        functools.partial(_merge_kernel, block=block),
+        in_specs=[
+            pl.BlockSpec((1, Lp), lambda: (0, 0)),
+            pl.BlockSpec((1, Lp), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda: (0, 0)),
+            pl.BlockSpec((1, block), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, block), jnp.int32),
+            jax.ShapeDtypeStruct((1, block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(flat_k[None, :], flat_s[None, :])
+    return out_k[0], out_s[0]

@@ -1,0 +1,40 @@
+"""Bitonic sorting network over the lane axis — usable inside Pallas kernels.
+
+TPU Mosaic has no native sort; a bitonic network built from static rolls,
+compares and selects maps cleanly onto the VPU (log²L compare-exchange
+sweeps over registers). All shifts are static powers of two, so every roll
+lowers to a static lane rotate. Roll wrap-around artifacts are always masked
+out by the XOR-partner structure (i^j == i+j when bit j of i is 0).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitonic_topk_desc(scores: jnp.ndarray, payload: jnp.ndarray):
+    """Sort descending by score along the last axis; payload follows.
+
+    scores: (..., L) f32 with L a power of two; payload: (..., L) int32.
+    Returns fully sorted (scores, payload).
+    """
+    L = scores.shape[-1]
+    assert (L & (L - 1)) == 0, f"bitonic length must be a power of 2: {L}"
+    idx = jnp.arange(L, dtype=jnp.int32)
+    n_stages = L.bit_length() - 1
+    for st in range(n_stages):
+        k = 2 << st
+        for sub in reversed(range(st + 1)):
+            j = 1 << sub
+            is_lo = (idx & j) == 0
+            s_dn = jnp.roll(scores, -j, axis=-1)   # value at i + j
+            s_up = jnp.roll(scores, j, axis=-1)    # value at i - j
+            p_dn = jnp.roll(payload, -j, axis=-1)
+            p_up = jnp.roll(payload, j, axis=-1)
+            part_s = jnp.where(is_lo, s_dn, s_up)
+            part_p = jnp.where(is_lo, p_dn, p_up)
+            desc = (idx & k) == 0
+            keep_max = is_lo == desc
+            take = jnp.where(keep_max, part_s > scores, part_s < scores)
+            scores = jnp.where(take, part_s, scores)
+            payload = jnp.where(take, part_p, payload)
+    return scores, payload

@@ -1,0 +1,176 @@
+"""Roofline extraction from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the optimized HLO text (operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic from the optimized (SPMD) HLO text.
+
+    The compiled module is the per-device program, so operand/output shapes
+    are shard shapes. ``operand`` sums raw operand bytes (the assignment's
+    definition); ``wire`` applies the ring-traffic model per op kind —
+    all-gather moves ≈ output−operand bytes per device, all-reduce ≈ 2×
+    operand, reduce-scatter / all-to-all / permute ≈ operand — and is what
+    the roofline collective term uses.
+    """
+    out = {k: 0 for k in _COLL_OPS}
+    wire = {k: 0 for k in _COLL_OPS}
+    count = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        op = None
+        for k in _COLL_OPS:
+            if re.search(rf"\b{k}(?:-start)?\(", rhs):
+                op = k
+                break
+        if op is None:
+            continue
+        paren = rhs.find("(")
+        operand_shapes = _SHAPE_RE.findall(rhs[paren + 1:])
+        output_shapes = _SHAPE_RE.findall(rhs[:paren])
+        ob = sum(_shape_bytes(dt, d) for dt, d in operand_shapes)
+        yb = sum(_shape_bytes(dt, d) for dt, d in output_shapes)
+        if not operand_shapes:
+            ob = yb
+        out[op] += ob
+        count[op] += 1
+        if op == "all-gather":
+            wire[op] += max(yb - ob, 0)
+        elif op == "all-reduce":
+            wire[op] += 2 * ob
+        else:
+            wire[op] += ob
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    out["wire_total"] = sum(wire[k] for k in _COLL_OPS)
+    out["wire"] = wire
+    out["counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All inputs are PER-DEVICE quantities (the SPMD program's cost
+    analysis) except model_flops, which is the global 6·N·D figure."""
+
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float            # per-device wire bytes
+    n_chips: int
+    model_flops: float = 0.0
+
+    @property
+    def compute_s(self):
+        return self.flops / HW["peak_flops"]
+
+    @property
+    def memory_s(self):
+        return self.bytes_accessed / HW["hbm_bw"]
+
+    @property
+    def collective_s(self):
+        return self.coll_bytes / HW["ici_bw"]
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self):
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self):
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes, "chips": self.n_chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+        }
+
+
+def lm_model_flops(cfg, batch: int, seq: int, kind: str) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) with N = active param count."""
+    n_active = lm_active_params(cfg)
+    tokens = batch * seq if kind != "decode" else batch
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def lm_active_params(cfg) -> float:
+    """Active (per-token) parameter count for an LMConfig."""
+    D = cfg.d_model
+    n = cfg.vocab * D  # embed
+    if not cfg.tie_embeddings:
+        n += cfg.vocab * D
+    for (dense, start, count) in cfg.stacks():
+        if cfg.mla:
+            m = cfg.mla
+            attn = (D * m.q_lora_rank
+                    + m.q_lora_rank * cfg.n_heads
+                    * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                    + D * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * cfg.n_heads
+                    * (m.qk_nope_head_dim + m.v_head_dim)
+                    + cfg.n_heads * m.v_head_dim * D)
+        else:
+            attn = D * cfg.n_heads * cfg.head_dim \
+                + 2 * D * cfg.n_kv * cfg.head_dim \
+                + cfg.n_heads * cfg.head_dim * D
+        if dense or cfg.moe is None:
+            ff = D * cfg.d_ff * (3 if cfg.gated_ffn else 2)
+        else:
+            e = cfg.moe
+            per_expert = D * e.d_ff_expert * 3
+            ff = e.top_k * per_expert + e.n_shared * per_expert \
+                + D * e.n_experts  # router
+        n += count * (attn + ff)
+    return float(n)

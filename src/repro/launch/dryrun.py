@@ -1,0 +1,156 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and record memory / cost / collective analysis.
+
+The two ``os.environ`` lines below MUST run before any other import (jax
+locks the device count on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import sharding
+from repro.launch import mesh as mesh_lib
+from repro.launch import analysis
+from repro.configs import get_arch, all_archs
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False) -> dict:
+    mod = get_arch(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if shape in getattr(mod, "SKIP_SHAPES", {}):
+        result["status"] = "skipped"
+        result["reason"] = mod.SKIP_SHAPES[shape]
+        _write(out_dir, result)
+        return result
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    t0 = time.time()
+    try:
+        with sharding.use_rules(mesh):
+            cell = mod.make_cell(shape)
+            lowered = cell.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            cost = compiled.cost_analysis() or {}
+            try:
+                mem = compiled.memory_analysis()
+                mem_d = {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                    "generated_code_bytes": getattr(
+                        mem, "generated_code_size_in_bytes", None),
+                }
+            except Exception as e:  # noqa: BLE001
+                mem_d = {"error": str(e)}
+
+            hlo = compiled.as_text()
+            coll = analysis.collective_bytes(hlo)
+            if save_hlo:
+                with open(os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.hlo"),
+                          "w") as f:
+                    f.write(hlo)
+
+            model_flops = _model_flops(mod, arch, shape)
+            rl = analysis.Roofline(
+                flops=float(cost.get("flops", 0.0)),
+                bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+                coll_bytes=float(coll["wire_total"]), n_chips=n_chips,
+                model_flops=model_flops)
+            result.update({
+                "status": "ok",
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "cost": {k: v for k, v in cost.items()
+                         if isinstance(v, (int, float))},
+                "memory": mem_d,
+                "collectives": {k: v for k, v in coll.items()
+                                if k != "counts"},
+                "collective_counts": coll["counts"],
+                "roofline": rl.row(),
+            })
+    except Exception as e:  # noqa: BLE001
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    _write(out_dir, result)
+    return result
+
+
+def _model_flops(mod, arch: str, shape: str) -> float:
+    try:
+        if getattr(mod, "FAMILY", "") == "lm":
+            from repro.configs.lm_common import LM_SHAPES
+            sh = LM_SHAPES[shape]
+            return analysis.lm_model_flops(mod.config(), sh["batch"],
+                                           sh["seq"], sh["kind"])
+    except Exception:  # noqa: BLE001
+        pass
+    return 0.0
+
+
+def _write(out_dir: str, result: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{result['arch']}__{result['shape']}__{result['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in all_archs():
+            for shape in get_arch(arch).SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        r = run_cell(arch, shape, args.multi_pod, args.out, args.save_hlo)
+        status = r["status"]
+        extra = ""
+        if status == "ok":
+            rl = r["roofline"]
+            extra = (f" lower {r['lower_s']}s compile {r['compile_s']}s | "
+                     f"dom={rl['dominant']} "
+                     f"c/m/x = {rl['compute_s']:.2e}/{rl['memory_s']:.2e}/"
+                     f"{rl['collective_s']:.2e}s")
+        elif status == "error":
+            extra = " " + r["error"][:200]
+        print(f"[{status:7s}] {arch:24s} {shape:14s} {r['mesh']}{extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

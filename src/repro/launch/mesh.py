@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Single pod: 16×16 (data, model) = 256 chips (TPU v5e pod slice).
+Multi-pod:  2×16×16 (pod, data, model) = 512 chips; the "pod" axis carries
+the cross-pod (DCN-class) collectives.
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

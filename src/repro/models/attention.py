@@ -1,0 +1,686 @@
+"""Attention blocks: GQA (+RoPE, sliding window, softcap) and MLA.
+
+Three interchangeable implementations:
+
+* ``einsum``        — materializes (B, H, Sq, Sk) logits; tests/smoke only.
+* ``blocked``       — pure-JAX online-softmax over key chunks (flash
+                      recurrence in XLA); every (q, k) block computed, mask
+                      applied. Memory-safe lowering for any S.
+* ``blocked_causal``— same recurrence but scanning only the blocks that
+                      intersect the causal/window band (half / O(S·W) the
+                      FLOPs; the §Perf iteration over ``blocked``).
+* ``pallas``        — the flash_attention kernel (TPU).
+
+The sliding ``window`` is a *traced* per-layer value (0 = global) so one
+scanned layer body serves local and global layers (DESIGN.md §7).
+
+Decode uses a one-step einsum over the KV cache (Sq == 1) with ring-buffer
+writes; local layers keep a W-length ring, global layers a full-length one.
+MLA decodes in the "absorbed" form (q folded through W_uk, output through
+W_uv) so only the compressed c_kv/k_rope cache is ever materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import common as cm
+from repro.models.common import param, ParamLeaf
+
+NEG_INF = jnp.float32(-1e30)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    softcap: float | None = None
+    mla: MLAConfig | None = None
+    attn_chunk_q: int = 512
+    attn_chunk_k: int = 1024
+
+
+# --------------------------------------------------------------- GQA init
+
+def init_gqa(key, cfg: AttnConfig, dtype):
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": param(ks[0], (D, H, Dh), ("embed_fsdp", "heads", None),
+                    dtype=dtype),
+        "wk": param(ks[1], (D, Hkv, Dh), ("embed_fsdp", "kv_heads", None),
+                    dtype=dtype),
+        "wv": param(ks[2], (D, Hkv, Dh), ("embed_fsdp", "kv_heads", None),
+                    dtype=dtype),
+        "wo": param(ks[3], (H, Dh, D), ("heads", None, "embed_fsdp"),
+                    dtype=dtype),
+    }
+
+
+def init_mla(key, cfg: AttnConfig, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": param(ks[0], (D, m.q_lora_rank), ("embed_fsdp", "q_lora"),
+                      dtype=dtype),
+        "q_norm": param(ks[1], (m.q_lora_rank,), ("q_lora",), init="zeros"),
+        "w_uq": param(ks[2], (m.q_lora_rank, H, qk_dim),
+                      ("q_lora", "heads", None), dtype=dtype),
+        "w_dkv": param(ks[3], (D, m.kv_lora_rank + m.qk_rope_head_dim),
+                       ("embed_fsdp", "kv_lora"), dtype=dtype),
+        "kv_norm": param(ks[4], (m.kv_lora_rank,), ("kv_lora",),
+                         init="zeros"),
+        "w_uk": param(ks[5], (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                      ("kv_lora", "heads", None), dtype=dtype),
+        "w_uv": param(ks[6], (m.kv_lora_rank, H, m.v_head_dim),
+                      ("kv_lora", "heads", None), dtype=dtype),
+        "wo": param(ks[7], (H, m.v_head_dim, D),
+                    ("heads", None, "embed_fsdp"), dtype=dtype),
+    }
+
+
+def init(key, cfg: AttnConfig, dtype):
+    return init_mla(key, cfg, dtype) if cfg.mla else init_gqa(key, cfg, dtype)
+
+
+# ----------------------------------------------------- masked-block softmax
+
+def _band_mask(qpos, kpos, window):
+    """Causal + traced sliding-window mask. window == 0 ⇒ global."""
+    m = kpos[None, :] <= qpos[:, None]
+    win = jnp.where(window > 0, window, jnp.int32(2**30))
+    m &= kpos[None, :] > qpos[:, None] - win
+    return m
+
+
+def _block_pairs(Sq, Sk, cq, ck, causal_skip: bool):
+    nq, nk = Sq // cq, Sk // ck
+    pairs = []
+    for qi in range(nq):
+        for ki in range(nk):
+            if causal_skip:
+                # Block intersects the causal band iff k-block start ≤
+                # q-block end (positions aligned to the right of kpos).
+                q_end = (Sk - Sq) + (qi + 1) * cq - 1
+                if ki * ck > q_end:
+                    continue
+            pairs.append((qi, ki))
+    return jnp.asarray(pairs, jnp.int32)
+
+
+def _attend_blocked(q, k, v, qpos, kpos, window, scale, cap,
+                    chunk_q, chunk_k, causal_skip: bool):
+    """Online-softmax over (q-chunk, k-chunk) pairs (AD-through-scan path;
+    the default train path is the custom-VJP `_flash` below).
+
+    q: (B, Sq, H, Dh); k/v: (B, Sk, Hkv, Dh) → (B, Sq, H, Dh).
+    ``causal_skip``: statically skip blocks above the diagonal (valid when
+    qpos/kpos are the standard aligned train/prefill positions).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    pairs = _block_pairs(Sq, Sk, cq, ck, causal_skip)
+
+    qf = q.astype(jnp.float32) * scale
+    acc = sharding.constrain(
+        jnp.zeros((B, Sq, H, Dh), jnp.float32), "batch", "seq", "heads", None)
+    mx = sharding.constrain(
+        jnp.full((B, Sq, H), NEG_INF, jnp.float32), "batch", "seq", "heads")
+    den = sharding.constrain(
+        jnp.zeros((B, Sq, H), jnp.float32), "batch", "seq", "heads")
+
+    @jax.checkpoint
+    def body(carry, pair):
+        # Checkpointed: backward recomputes s/p per block instead of the
+        # scan stacking (B, H, cq, ck) residuals per step — the flash
+        # memory/recompute trade, expressed in XLA.
+        acc, mx, den = carry
+        qi, ki = pair[0], pair[1]
+        qc = jax.lax.dynamic_slice_in_dim(qf, qi * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, qi * cq, cq)
+        kc = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kpos, ki * ck, ck)
+        kc = kc.astype(jnp.float32)
+        # (B, cq, H, Dh) x (B, ck, Hkv, Dh) -> (B, H, cq, ck)
+        qg = qc.reshape(B, cq, Hkv, g, Dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc,
+                       preferred_element_type=jnp.float32)
+        s = s.reshape(B, Hkv * g, cq, ck)
+        s = cm.softcap(s, cap)
+        mask = _band_mask(qp, kp, window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1)                       # (B, H, cq)
+        m_prev = jax.lax.dynamic_slice_in_dim(
+            mx, qi * cq, cq, axis=1).transpose(0, 2, 1)   # (B, H, cq)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                   # (B, H, cq)
+        d_prev = jax.lax.dynamic_slice_in_dim(
+            den, qi * cq, cq, axis=1).transpose(0, 2, 1)
+        d_new = d_prev * alpha + jnp.sum(p, axis=-1)
+        a_prev = jax.lax.dynamic_slice_in_dim(acc, qi * cq, cq, axis=1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd",
+                        p.reshape(B, Hkv, g, cq, ck), vc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        pv = pv.reshape(B, cq, H, Dh)
+        a_new = a_prev * alpha.transpose(0, 2, 1)[..., None] + pv
+
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, qi * cq, 1)
+        mx = jax.lax.dynamic_update_slice_in_dim(
+            mx, m_new.transpose(0, 2, 1), qi * cq, 1)
+        den = jax.lax.dynamic_update_slice_in_dim(
+            den, d_new.transpose(0, 2, 1), qi * cq, 1)
+        acc = sharding.constrain(acc, "batch", "seq", "heads", None)
+        mx = sharding.constrain(mx, "batch", "seq", "heads")
+        den = sharding.constrain(den, "batch", "seq", "heads")
+        return (acc, mx, den), None
+
+    (acc, mx, den), _ = jax.lax.scan(body, (acc, mx, den), pairs)
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
+    return out
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def _flash(q, k, v, qpos, kpos, window, scale, cap, cq, ck,
+           causal_skip):
+    """Blockwise attention with a hand-written flash backward.
+
+    AD through the online-softmax scan would stack the (B, Sq, H, Dh) f32
+    accumulator carry once per block pair; the custom VJP instead saves
+    only (out, rowmax, rowsum) and recomputes each block's probabilities in
+    the backward — the FlashAttention memory/recompute trade, in XLA.
+    """
+    out, _, _ = _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, cap,
+                                cq, ck, causal_skip)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, cap, cq, ck,
+                    causal_skip):
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    pairs = _block_pairs(Sq, Sk, cq, ck, causal_skip)
+    qf = sharding.constrain(q.astype(jnp.float32) * scale,
+                            "batch", "seq", "heads", None)
+    k = sharding.constrain(k, "batch", "seq", "kv_heads", None)
+    v = sharding.constrain(v, "batch", "seq", "kv_heads", None)
+    acc = sharding.constrain(
+        jnp.zeros((B, Sq, H, Dh), jnp.float32), "batch", "seq", "heads", None)
+    mx = sharding.constrain(
+        jnp.full((B, Sq, H), NEG_INF, jnp.float32), "batch", "seq", "heads")
+    den = sharding.constrain(
+        jnp.zeros((B, Sq, H), jnp.float32), "batch", "seq", "heads")
+
+    def body(carry, pair):
+        acc, mx, den = carry
+        qi, ki = pair[0], pair[1]
+        qc = jax.lax.dynamic_slice_in_dim(qf, qi * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, qi * cq, cq)
+        kc = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kpos, ki * ck, ck)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                       qc.reshape(B, cq, Hkv, g, Dh),
+                       kc.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        s = s.reshape(B, H, cq, ck)
+        s = cm.softcap(s, cap)
+        mask = _band_mask(qp, kp, window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1)
+        m_prev = jax.lax.dynamic_slice_in_dim(
+            mx, qi * cq, cq, axis=1).transpose(0, 2, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_safe[..., None]), 0.0)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0,
+                          jnp.exp(m_prev - m_safe))
+        d_prev = jax.lax.dynamic_slice_in_dim(
+            den, qi * cq, cq, axis=1).transpose(0, 2, 1)
+        d_new = d_prev * alpha + jnp.sum(p, axis=-1)
+        a_prev = jax.lax.dynamic_slice_in_dim(acc, qi * cq, cq, axis=1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd",
+                        p.reshape(B, Hkv, g, cq, ck),
+                        vc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        a_new = a_prev * alpha.transpose(0, 2, 1)[..., None] \
+            + pv.reshape(B, cq, H, Dh)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, qi * cq, 1)
+        mx = jax.lax.dynamic_update_slice_in_dim(
+            mx, m_new.transpose(0, 2, 1), qi * cq, 1)
+        den = jax.lax.dynamic_update_slice_in_dim(
+            den, d_new.transpose(0, 2, 1), qi * cq, 1)
+        acc = sharding.constrain(acc, "batch", "seq", "heads", None)
+        mx = sharding.constrain(mx, "batch", "seq", "heads")
+        den = sharding.constrain(den, "batch", "seq", "heads")
+        return (acc, mx, den), None
+
+    (acc, mx, den), _ = jax.lax.scan(body, (acc, mx, den), pairs)
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
+    return out, mx, den
+
+
+def _flash_fwd(q, k, v, qpos, kpos, window, scale, cap, cq, ck,
+               causal_skip):
+    out, mx, den = _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, cap,
+                                   cq, ck, causal_skip)
+    return out, (q, k, v, qpos, kpos, window, out, mx, den)
+
+
+def _flash_bwd(scale, cap, cq, ck, causal_skip, res, dout):
+    q, k, v, qpos, kpos, window, out, mx, den = res
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    pairs = _block_pairs(Sq, Sk, cq, ck, causal_skip)
+    qf = q.astype(jnp.float32) * scale
+    dout = dout.astype(jnp.float32)
+    # delta_t = Σ_d dout ∘ out  (B, Sq, H)
+    delta = jnp.sum(dout * out, axis=-1)
+    m_safe = jnp.where(mx == NEG_INF, 0.0, mx)
+    den_inv = 1.0 / jnp.maximum(den, 1e-30)
+
+    dq = sharding.constrain(
+        jnp.zeros((B, Sq, H, Dh), jnp.float32), "batch", "seq", "heads", None)
+    dk = sharding.constrain(
+        jnp.zeros((B, Sk, Hkv, Dh), jnp.float32),
+        "batch", "seq", "kv_heads", None)
+    dv = sharding.constrain(
+        jnp.zeros((B, Sk, Hkv, Dh), jnp.float32),
+        "batch", "seq", "kv_heads", None)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        qi, ki = pair[0], pair[1]
+        qc = jax.lax.dynamic_slice_in_dim(qf, qi * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, qi * cq, cq)
+        kc = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1) \
+            .astype(jnp.float32)
+        vc = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1) \
+            .astype(jnp.float32)
+        kp = jax.lax.dynamic_slice_in_dim(kpos, ki * ck, ck)
+        do_c = jax.lax.dynamic_slice_in_dim(dout, qi * cq, cq, axis=1)
+        m_c = jax.lax.dynamic_slice_in_dim(
+            m_safe, qi * cq, cq, axis=1).transpose(0, 2, 1)   # (B,H,cq)
+        di_c = jax.lax.dynamic_slice_in_dim(
+            den_inv, qi * cq, cq, axis=1).transpose(0, 2, 1)
+        dl_c = jax.lax.dynamic_slice_in_dim(
+            delta, qi * cq, cq, axis=1).transpose(0, 2, 1)
+
+        s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                       qc.reshape(B, cq, Hkv, g, Dh), kc,
+                       preferred_element_type=jnp.float32)
+        s = s.reshape(B, H, cq, ck)
+        if cap:
+            sc = cm.softcap(s, cap)
+            dcap = 1.0 - (sc / cap) ** 2
+        else:
+            sc = s
+            dcap = None
+        mask = _band_mask(qp, kp, window)
+        p = jnp.where(mask[None, None],
+                      jnp.exp(sc - m_c[..., None]) * di_c[..., None], 0.0)
+
+        # dv[k] += Σ_q p ∘ dout
+        dv_c = jnp.einsum("bhgqk,bqhgd->bkhd",
+                          p.reshape(B, Hkv, g, cq, ck),
+                          do_c.reshape(B, cq, Hkv, g, Dh),
+                          preferred_element_type=jnp.float32)
+        # dp = dout @ v^T ; ds = p ∘ (dp − delta)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk",
+                        do_c.reshape(B, cq, Hkv, g, Dh), vc,
+                        preferred_element_type=jnp.float32)
+        dp = dp.reshape(B, H, cq, ck)
+        ds = p * (dp - dl_c[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dq_c = jnp.einsum("bhgqk,bkhd->bqhgd",
+                          ds.reshape(B, Hkv, g, cq, ck), kc,
+                          preferred_element_type=jnp.float32)
+        dq_c = dq_c.reshape(B, cq, H, Dh) * scale
+        dk_c = jnp.einsum("bhgqk,bqhgd->bkhd",
+                          ds.reshape(B, Hkv, g, cq, ck),
+                          qc.reshape(B, cq, Hkv, g, Dh),
+                          preferred_element_type=jnp.float32)
+
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, qi * cq, cq, 1) + dq_c,
+            qi * cq, 1)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, ki * ck, ck, 1) + dk_c,
+            ki * ck, 1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, ki * ck, ck, 1) + dv_c,
+            ki * ck, 1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq, dk, dv), pairs)
+    f0 = jax.dtypes.float0
+    import numpy as _np
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            _np.zeros(qpos.shape, f0), _np.zeros(kpos.shape, f0),
+            _np.zeros(jnp.shape(window), f0))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _attend_einsum(q, k, v, qpos, kpos, window, scale, cap):
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, g, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = cm.softcap(s, cap)
+    mask = _band_mask(qpos, kpos, window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh)
+
+
+def _attend(q, k, v, qpos, kpos, window, cfg: AttnConfig, impl, scale=None):
+    scale = cfg.head_dim ** -0.5 if scale is None else scale
+    cap = cfg.softcap
+    if impl == "einsum":
+        out = _attend_einsum(q, k, v, qpos, kpos, window, scale, cap)
+    elif impl in ("blocked", "blocked_causal"):
+        causal_skip = impl == "blocked_causal"
+        cq = min(cfg.attn_chunk_q, q.shape[1])
+        ck = min(cfg.attn_chunk_k, k.shape[1])
+        out = _flash(q, k, v, qpos, kpos, window, scale, cap, cq, ck,
+                     causal_skip)
+    elif impl in ("blocked_ad", "blocked_causal_ad"):
+        out = _attend_blocked(q, k, v, qpos, kpos, window, scale, cap,
+                              cfg.attn_chunk_q, cfg.attn_chunk_k,
+                              impl == "blocked_causal_ad")
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        qt = q.transpose(0, 2, 1, 3)
+        out = kops.flash_attention(
+            qt, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=True, window=None, softcap=cap, scale=scale)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        raise ValueError(impl)
+    return out
+
+
+# ------------------------------------------------------------- GQA apply
+
+def _pin_gqa(p):
+    """Use-site FSDP sharding pins (keep per-layer gathers inside the scan)."""
+    c = sharding.constrain
+    return {
+        "wq": c(p["wq"], "embed_fsdp", "heads", None),
+        "wk": c(p["wk"], "embed_fsdp", "kv_heads", None),
+        "wv": c(p["wv"], "embed_fsdp", "kv_heads", None),
+        "wo": c(p["wo"], "heads", None, "embed_fsdp"),
+    }
+
+
+def gqa_forward(p, cfg: AttnConfig, x, positions, window, impl):
+    """Training/prefill forward. x: (B, S, D) → (B, S, D)."""
+    dt = x.dtype
+    p = _pin_gqa(p)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = cm.rope(q.transpose(0, 2, 1, 3), positions[:, None, :],
+                cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = cm.rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                cfg.rope_theta).transpose(0, 2, 1, 3)
+    q = sharding.constrain(q, "batch", "seq", "heads", None)
+    k = sharding.constrain(k, "batch", "seq", "kv_heads", None)
+    out = _attend(q, k, v, positions[0], positions[0], window, cfg, impl)
+    out = out.astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def gqa_prefill_cache(p, cfg: AttnConfig, x, positions, cache_len: int):
+    """Build the (ring) KV cache from a prompt. Returns cache dict."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    k = cm.rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                cfg.rope_theta).transpose(0, 2, 1, 3)
+    W = cache_len
+    if S >= W:
+        # Ring invariant: position p lives at slot p % W (decode writes at
+        # step % W) — roll the truncated window into place.
+        ck, cv = k[:, S - W:], v[:, S - W:]
+        cpos = positions[:, S - W:]
+        shift = S % W
+        if shift:
+            ck = jnp.roll(ck, shift, axis=1)
+            cv = jnp.roll(cv, shift, axis=1)
+            cpos = jnp.roll(cpos, shift, axis=1)
+    else:
+        pad = W - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    return {"k": sharding.constrain(ck, "batch", "kv_seq", "kv_heads", None),
+            "v": sharding.constrain(cv, "batch", "kv_seq", "kv_heads", None),
+            "pos": cpos}
+
+
+def gqa_decode(p, cfg: AttnConfig, x, pos, window, cache, step):
+    """One decode step. x: (B, 1, D); pos: (B,) current absolute position.
+
+    ``step`` — write slot counter (ring index = step % cache_len).
+    Returns (out (B, 1, D), new_cache).
+    """
+    dt = x.dtype
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = cm.rope(q.transpose(0, 2, 1, 3), pos[:, None, None],
+                cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = cm.rope(k.transpose(0, 2, 1, 3), pos[:, None, None],
+                cfg.rope_theta).transpose(0, 2, 1, 3)
+    W = cache["k"].shape[1]
+    slot = step % W
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos[:, None], slot, axis=1)
+
+    scale = cfg.head_dim ** -0.5
+    Hkv, g = cfg.n_kv, cfg.n_heads // cfg.n_kv
+    qg = (q.astype(jnp.float32) * scale).reshape(B, 1, Hkv, g, cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck.astype(jnp.float32))
+    s = cm.softcap(s, cfg.softcap)
+    win = jnp.where(window > 0, window, jnp.int32(2**30))
+    ok = (cpos[:, None, None, None, :] <= pos[:, None, None, None, None])
+    ok &= cpos[:, None, None, None, :] > (pos[:, None, None, None, None] - win)
+    ok &= cpos[:, None, None, None, :] >= 0
+    s = jnp.where(ok, s, NEG_INF)
+    # fp32 softmax over the (possibly seq-sharded) cache axis.
+    p_attn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p_attn, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads, cfg.head_dim).astype(dt)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+# ------------------------------------------------------------- MLA apply
+
+def _pin_mla(p):
+    c = sharding.constrain
+    out = dict(p)
+    out["w_dq"] = c(p["w_dq"], "embed_fsdp", "q_lora")
+    out["w_uq"] = c(p["w_uq"], "q_lora", "heads", None)
+    out["w_dkv"] = c(p["w_dkv"], "embed_fsdp", "kv_lora")
+    out["w_uk"] = c(p["w_uk"], "kv_lora", "heads", None)
+    out["w_uv"] = c(p["w_uv"], "kv_lora", "heads", None)
+    out["wo"] = c(p["wo"], "heads", None, "embed_fsdp")
+    return out
+
+
+def _mla_qkv(p, cfg: AttnConfig, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    p = _pin_mla(p)
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(dt))
+    cq = cm.rms_norm(cq, p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = cm.rope(
+        q[..., m.qk_nope_head_dim:].transpose(0, 2, 1, 3),
+        positions[:, None, :], cfg.rope_theta).transpose(0, 2, 1, 3)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))
+    c_kv = cm.rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = cm.rope(
+        ckv_full[..., m.kv_lora_rank:][:, None], positions[:, None, :],
+        cfg.rope_theta)[:, 0]                      # (B, S, rope_dim)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p, cfg: AttnConfig, x, positions, window, impl):
+    """Training/prefill MLA forward (direct form)."""
+    m = cfg.mla
+    dt = x.dtype
+    p = _pin_mla(p)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    c_kv = sharding.constrain(c_kv, "batch", "seq", None)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(dt))
+    q_nope = sharding.constrain(q_nope, "batch", "seq", "heads", None)
+    k_nope = sharding.constrain(k_nope, "batch", "seq", "heads", None)
+    v = sharding.constrain(v, "batch", "seq", "heads", None)
+    H = cfg.n_heads
+    B, S = x.shape[:2]
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    q = sharding.constrain(q, "batch", "seq", "heads", None)
+    k = sharding.constrain(k, "batch", "seq", "heads", None)
+    v_p = sharding.constrain(_pad_v(v, k.shape[-1]),
+                             "batch", "seq", "heads", None)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    cfg_v = dataclasses.replace(
+        cfg, n_kv=cfg.n_heads, head_dim=m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = _attend(q, k, v_p, positions[0], positions[0],
+                  window, cfg_v, impl, scale=scale)
+    out = out[..., : m.v_head_dim].astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def _pad_v(v, dim):
+    pad = dim - v.shape[-1]
+    if pad:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    return v
+
+
+def mla_prefill_cache(p, cfg: AttnConfig, x, positions, cache_len: int):
+    _, _, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    B, S = x.shape[:2]
+    W = cache_len
+    if S >= W:
+        c_kv, k_rope = c_kv[:, S - W:], k_rope[:, S - W:]
+        cpos = positions[:, S - W:]
+        shift = S % W
+        if shift:
+            c_kv = jnp.roll(c_kv, shift, axis=1)
+            k_rope = jnp.roll(k_rope, shift, axis=1)
+            cpos = jnp.roll(cpos, shift, axis=1)
+    else:
+        pad = W - S
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+        cpos = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    return {"c_kv": sharding.constrain(c_kv, "batch", "kv_seq", None),
+            "k_rope": sharding.constrain(k_rope, "batch", "kv_seq", None),
+            "pos": cpos}
+
+
+def mla_decode(p, cfg: AttnConfig, x, pos, window, cache, step):
+    """Absorbed-form MLA decode: only c_kv/k_rope are ever materialized."""
+    m = cfg.mla
+    dt = x.dtype
+    B = x.shape[0]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(
+        p, cfg, x, pos[:, None])
+    W = cache["c_kv"].shape[1]
+    slot = step % W
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new, slot, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos[:, None], slot, axis=1)
+
+    # Absorb W_uk into q: (B, 1, H, nope) @ (r, H, nope) -> (B, H, r)
+    q_abs = jnp.einsum("bshk,rhk->bhr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_abs, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bshk,bSk->bhS", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (s_nope + s_rope) * scale                       # (B, H, W)
+    win = jnp.where(window > 0, window, jnp.int32(2**30))
+    ok = (cpos[:, None, :] <= pos[:, None, None])
+    ok &= cpos[:, None, :] > (pos[:, None, None] - win)
+    ok &= cpos[:, None, :] >= 0
+    s = jnp.where(ok, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)                     # (B, H, W)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhk->bhk", ctx, p["w_uv"].astype(jnp.float32))
+    out = out[:, None].astype(dt)                       # (B, 1, H, v_dim)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "pos": cpos}
+
+
+# ------------------------------------------------------------- dispatch
+
+def forward(p, cfg: AttnConfig, x, positions, window, impl="blocked_causal"):
+    if cfg.mla:
+        return mla_forward(p, cfg, x, positions, window, impl)
+    return gqa_forward(p, cfg, x, positions, window, impl)
+
+
+def prefill_cache(p, cfg: AttnConfig, x, positions, cache_len: int):
+    if cfg.mla:
+        return mla_prefill_cache(p, cfg, x, positions, cache_len)
+    return gqa_prefill_cache(p, cfg, x, positions, cache_len)
+
+
+def decode(p, cfg: AttnConfig, x, pos, window, cache, step):
+    if cfg.mla:
+        return mla_decode(p, cfg, x, pos, window, cache, step)
+    return gqa_decode(p, cfg, x, pos, window, cache, step)

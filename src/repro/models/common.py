@@ -1,0 +1,152 @@
+"""Shared model plumbing: params-with-axes, norms, RoPE, initializers.
+
+Parameters are plain nested dicts of arrays. Every leaf is created through
+``param(key, shape, axes)`` which simultaneously records the *logical*
+sharding axes in a mirror tree — ``split`` separates the two so launchers
+can build pjit in_shardings without a second source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamLeaf:
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+
+def param(key, shape, axes, scale: float | None = None,
+          dtype=jnp.float32, init: str = "normal") -> ParamLeaf:
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) else 1
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return ParamLeaf(v, axes)
+
+
+def is_leaf(x):
+    return isinstance(x, ParamLeaf)
+
+
+def split(tree):
+    """→ (values_tree, axes_tree) from a tree of ParamLeaf."""
+    values = jax.tree_util.tree_map(lambda l: l.value, tree, is_leaf=is_leaf)
+    axes = jax.tree_util.tree_map(lambda l: l.axes, tree, is_leaf=is_leaf)
+    return values, axes
+
+
+def stack_layers(leaves: list):
+    """Stack per-layer ParamLeaf trees along a new leading 'layers' axis."""
+    def stack(*ls):
+        return ParamLeaf(jnp.stack([l.value for l in ls]),
+                         ("layers",) + ls[0].axes)
+    return jax.tree_util.tree_map(stack, *leaves, is_leaf=is_leaf)
+
+
+def fold_key(key, *ints):
+    for i in ints:
+        key = jax.random.fold_in(key, i)
+    return key
+
+
+# ---------------------------------------------------------------- numerics
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., S, D_head); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float | None):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    params: Any = jnp.float32
+    compute: Any = jnp.bfloat16
+    # reductions (softmax/norm/loss) are always fp32.
+
+
+def cross_entropy(logits, labels, *, softcap_val: float | None = None,
+                  ignore_id: int = -1):
+    """Mean token CE in fp32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    if softcap_val:
+        logits = softcap(logits, softcap_val)
+    mask = labels != ignore_id
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def chunked_cross_entropy(x, head, labels, *, softcap_val=None,
+                          ignore_id: int = -1, chunk: int = 512):
+    """Fused head-matmul + softmax-xent over sequence chunks.
+
+    Never materializes the (B, S, V) fp32 logits: each chunk computes its
+    logits, lse and gold inside a checkpointed scan step (backward
+    recomputes the chunk's logits). x: (B, S, D); head: (D, V).
+    """
+    B, S, D = x.shape
+    c = min(chunk, S)
+    if S % c:
+        c = S  # fallback: no chunking for odd lengths
+    xc = x.reshape(B, S // c, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, S // c, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, n_tok = carry
+        xb, lb = xs
+        logits = jnp.einsum("bsd,dv->bsv", xb, head).astype(jnp.float32)
+        if softcap_val:
+            logits = softcap(logits, softcap_val)
+        mask = lb != ignore_id
+        safe = jnp.where(mask, lb, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0]
+        nll = (lse - gold) * mask
+        return (nll_sum + jnp.sum(nll),
+                n_tok + jnp.sum(mask.astype(jnp.int32))), None
+
+    (nll_sum, n_tok), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (xc, lc))
+    return nll_sum / jnp.maximum(n_tok, 1)

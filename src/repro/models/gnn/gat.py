@@ -1,0 +1,89 @@
+"""GAT (Velickovic et al., arXiv:1710.10903): attention message passing.
+
+Edge scores via SDDMM-style a_src·h_i + a_dst·h_j, segment-softmax over
+incoming edges, attention-weighted aggregation. The edge-list path uses
+segment ops; the padded-degree serving path uses the fused Pallas
+``neigh_softmax_agg`` kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import param
+from repro.models.gnn import graph as G
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    negative_slope: float = 0.2
+    task: str = "node_class"      # node_class | graph_reg (pooled)
+
+
+def init(key, cfg: GATConfig):
+    ks = jax.random.split(key, cfg.n_layers * 3)
+    p = {}
+    d_prev = cfg.d_in
+    out_units = 1 if cfg.task == "graph_reg" else cfg.n_classes
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        d_out = out_units if last else cfg.d_hidden
+        heads = cfg.n_heads
+        p[f"layer_{i}"] = {
+            "w": param(ks[3 * i], (d_prev, heads, d_out),
+                       ("embed_fsdp", "heads", None)),
+            "a_src": param(ks[3 * i + 1], (heads, d_out), ("heads", None)),
+            "a_dst": param(ks[3 * i + 2], (heads, d_out), ("heads", None)),
+        }
+        d_prev = d_out if last else d_out * heads
+    return cm.split(p)
+
+
+def _gat_layer(lp, cfg: GATConfig, g: G.Graph, h, n_nodes, concat: bool):
+    hw = jnp.einsum("nf,fhd->nhd", h, lp["w"])            # (N, H, d)
+    e_src = jnp.einsum("nhd,hd->nh", hw, lp["a_src"])     # (N, H)
+    e_dst = jnp.einsum("nhd,hd->nh", hw, lp["a_dst"])
+    logits = G.gather_src(g, e_src) + G.gather_dst(g, e_dst)
+    logits = jax.nn.leaky_relu(logits, cfg.negative_slope)  # (E, H)
+    alpha = G.edge_softmax(g, logits, n_nodes)              # (E, H)
+    msgs = alpha[..., None] * G.gather_src(g, hw)           # (E, H, d)
+    out = G.scatter_sum(g, msgs, n_nodes)                   # (N, H, d)
+    if concat:
+        return jax.nn.elu(out.reshape(n_nodes, -1))
+    return jnp.mean(out, axis=1)                            # head-avg logits
+
+
+def apply(params, cfg: GATConfig, g: G.Graph):
+    n = g.node_mask.shape[0]
+    h = g.node_feat
+    for i in range(cfg.n_layers):
+        h = _gat_layer(params[f"layer_{i}"], cfg, g, h, n,
+                       concat=i < cfg.n_layers - 1)
+    return h                                                # (N, n_classes)
+
+
+def loss_fn(params, cfg: GATConfig, g: G.Graph):
+    out = apply(params, cfg, g)
+    if cfg.task == "graph_reg":
+        n_graphs = int(g.labels.shape[0])
+        ids = g.graph_ids if g.graph_ids is not None else \
+            jnp.zeros((out.shape[0],), jnp.int32)
+        energy = jax.ops.segment_sum(out[:, 0] * g.node_mask, ids,
+                                     num_segments=n_graphs)
+        loss = jnp.mean((energy - g.labels.astype(jnp.float32)) ** 2)
+        return loss, {"loss": loss}
+    mask = g.node_mask & (g.labels >= 0)
+    labels = jnp.where(mask, g.labels, 0)
+    logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"loss": loss}

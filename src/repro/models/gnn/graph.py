@@ -1,0 +1,138 @@
+"""Graph containers + message-passing primitives (edge-list / segment ops).
+
+JAX sparse is BCOO-only, so message passing is built on
+``jax.ops.segment_sum``/``segment_max`` over an edge-index → node scatter —
+this IS the system's GNN substrate (assignment note). Graphs are padded,
+fixed-shape pytrees: invalid edges have ``src == -1`` and scatter into a
+ghost row that is dropped.
+
+Sharding: edges shard over every mesh axis, nodes over the data axes;
+partial per-shard aggregates are combined by XLA's SPMD scatter handling
+(reduce-scatter over the node axis on the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Padded graph batch. All leaves are device arrays."""
+
+    node_feat: Any     # (N, F) f32 (or None)
+    positions: Any     # (N, 3) f32 (or None, geometric models only)
+    edge_src: Any      # (E,) int32, -1 = padding
+    edge_dst: Any      # (E,) int32
+    node_mask: Any     # (N,) bool
+    labels: Any        # (N,) int32 node labels or (G,) graph targets
+    graph_ids: Any = None  # (N,) int32 for batched small graphs
+
+
+jax.tree_util.register_pytree_node(
+    Graph,
+    lambda g: ((g.node_feat, g.positions, g.edge_src, g.edge_dst,
+                g.node_mask, g.labels, g.graph_ids), None),
+    lambda _, c: Graph(*c))
+
+
+def edge_valid(g: Graph):
+    return g.edge_src >= 0
+
+
+def _pin_edges(x):
+    """Edge-tensor sharding pin.
+
+    NOTE (measured, EXPERIMENTS.md §Perf): at ogb_products scale GSPMD
+    cannot be *constrained* into an efficient plan for scatter/gather-based
+    message passing — both all-axis and node-aligned edge pins made the
+    involuntary resharding WORSE (nequip 886→2392 GB/device). Pins are
+    therefore disabled (identity); the designed fix is manual shard_map
+    partitioning (edge-partitioned, per-shard dense node aggregate,
+    reduce-scatter over the node axis), tracked as future work.
+    """
+    return x
+
+
+def _pin_nodes(x):
+    return x
+
+
+def gather_src(g: Graph, x):
+    """x[src] with padding-safe gather. x: (N, ...) → (E, ...)."""
+    safe = jnp.where(g.edge_src >= 0, g.edge_src, 0)
+    out = x[safe]
+    mask = (g.edge_src >= 0).reshape((-1,) + (1,) * (out.ndim - 1))
+    return _pin_edges(jnp.where(mask, out, 0))
+
+
+def gather_dst(g: Graph, x):
+    safe = jnp.where(g.edge_dst >= 0, g.edge_dst, 0)
+    out = x[safe]
+    mask = (g.edge_dst >= 0).reshape((-1,) + (1,) * (out.ndim - 1))
+    return _pin_edges(jnp.where(mask, out, 0))
+
+
+def scatter_sum(g: Graph, messages, n_nodes: int):
+    """Σ over incoming edges. messages: (E, ...) → (N, ...)."""
+    dst = jnp.where(g.edge_src >= 0, g.edge_dst, n_nodes)  # ghost row
+    messages = _pin_edges(messages)
+    out = jax.ops.segment_sum(messages, dst, num_segments=n_nodes + 1)
+    return _pin_nodes(out[:n_nodes])
+
+
+def scatter_max(g: Graph, messages, n_nodes: int, fill=-jnp.inf):
+    dst = jnp.where(g.edge_src >= 0, g.edge_dst, n_nodes)
+    messages = _pin_edges(messages)
+    out = jax.ops.segment_max(messages, dst, num_segments=n_nodes + 1)
+    out = _pin_nodes(out[:n_nodes])
+    return jnp.where(jnp.isfinite(out), out, fill)
+
+
+def scatter_mean(g: Graph, messages, n_nodes: int):
+    s = scatter_sum(g, messages, n_nodes)
+    deg = scatter_sum(g, jnp.ones((messages.shape[0], 1), messages.dtype),
+                      n_nodes)
+    return s / jnp.maximum(deg, 1.0)
+
+
+def edge_softmax(g: Graph, logits, n_nodes: int):
+    """Softmax of edge logits over each destination's incoming edges."""
+    mx = scatter_max(g, logits, n_nodes, fill=0.0)
+    ex = jnp.exp(logits - gather_dst(g, mx))
+    ex = jnp.where(edge_valid(g).reshape((-1,) + (1,) * (ex.ndim - 1)),
+                   ex, 0.0)
+    den = scatter_sum(g, ex, n_nodes)
+    return ex / jnp.maximum(gather_dst(g, den), 1e-30)
+
+
+def constrain_graph(g: Graph) -> Graph:
+    """Production-mesh sharding annotations for a graph batch."""
+    c = sharding.constrain
+    def nodes(x, *extra):
+        return None if x is None else c(x, "graph_nodes", *extra)
+    return Graph(
+        node_feat=None if g.node_feat is None else c(
+            g.node_feat, "graph_nodes", None),
+        positions=None if g.positions is None else c(
+            g.positions, "graph_nodes", None),
+        edge_src=c(g.edge_src, "graph_edges"),
+        edge_dst=c(g.edge_dst, "graph_edges"),
+        node_mask=c(g.node_mask, "graph_nodes"),
+        labels=g.labels,
+        graph_ids=g.graph_ids,
+    )
+
+
+def radial_basis(r, n_rbf: int, cutoff: float):
+    """Gaussian RBF × smooth cosine cutoff envelope. r: (E,) → (E, n_rbf)."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    width = cutoff / n_rbf
+    rb = jnp.exp(-((r[:, None] - centers[None, :]) ** 2) / (2 * width**2))
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(r / cutoff, 0, 1)) + 1.0)
+    return rb * env[:, None]

@@ -1,0 +1,139 @@
+"""NequIP (Batzner et al., arXiv:2101.03164): E(3)-equivariant interatomic
+potential with tensor-product message passing.
+
+Features are irrep dicts {l: (N, C, 2l+1)}. Each interaction block:
+radial MLP on RBF(r) → per-(path, channel) weights; message on edge =
+CG(l_in, l_f → l_out) · (feat_src[l_in] ⊗ Y_{l_f}(r̂)); scatter-sum;
+per-l channel-mixing self-interaction; gated nonlinearity. Readout sums a
+scalar-channel MLP into per-node energies.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import param
+from repro.models.gnn import graph as G
+from repro.models.gnn import e3
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32          # channels per irrep
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_in: int = 16              # input scalar features (species embed)
+    n_classes: int = 7
+    task: str = "graph_reg"
+    avg_neighbors: float = 8.0  # aggregation normalizer (NequIP convention)
+
+
+def _tp_paths(l_max: int):
+    """(l_in, l_f, l_out) with l_f the SH filter degree."""
+    return [p for p in e3.paths(l_max)]
+
+
+def init(key, cfg: NequIPConfig):
+    C = cfg.d_hidden
+    n_paths = len(_tp_paths(cfg.l_max))
+    ks = jax.random.split(key, 3 + cfg.n_layers * 2)
+    p = {"embed": param(ks[0], (cfg.d_in, C), ("embed_fsdp", "mlp"))}
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[1 + 2 * i], 2 + (cfg.l_max + 1))
+        layer = {
+            # radial MLP: rbf → hidden → per-(path, channel) weights
+            "rad_w0": param(lk[0], (cfg.n_rbf, 32), (None, None)),
+            "rad_w1": param(lk[1], (32, n_paths * C), (None, "mlp")),
+        }
+        for l in range(cfg.l_max + 1):
+            layer[f"self_{l}"] = param(lk[2 + l], (C, C), ("mlp", "mlp"),
+                                       scale=1.0 / C**0.5)
+        # gates: one scalar gate channel per non-scalar l
+        layer["gate_w"] = param(ks[2 + 2 * i], (C, cfg.l_max * C),
+                                ("mlp", None))
+        p[f"layer_{i}"] = layer
+    out_dim = cfg.n_classes if cfg.task == "node_class" else 1
+    hk = jax.random.split(ks[-1], 2)
+    p["head0"] = param(hk[0], (C, C), ("mlp", "mlp"))
+    p["head1"] = param(hk[1], (C, out_dim), ("mlp", None))
+    return cm.split(p)
+
+
+def _interact(lp, cfg: NequIPConfig, g: G.Graph, feats, rbf, sh_edges, n):
+    C = cfg.d_hidden
+    paths_ = _tp_paths(cfg.l_max)
+    # radial weights: (E, n_paths, C)
+    rw = jax.nn.silu(rbf @ lp["rad_w0"]) @ lp["rad_w1"]
+    rw = rw.reshape(rbf.shape[0], len(paths_), C)
+
+    msgs = {l: 0.0 for l in range(cfg.l_max + 1)}
+    for pi, (l_in, l_f, l_out) in enumerate(paths_):
+        cgt = e3.cg_jnp(l_in, l_f, l_out)               # (di, df, do)
+        src = G.gather_src(g, feats[l_in])              # (E, C, di)
+        y = sh_edges[l_f]                               # (E, df)
+        m = jnp.einsum("eci,ef,ifo->eco", src, y, cgt)
+        msgs[l_out] = msgs[l_out] + m * rw[:, pi][:, :, None]
+
+    out = {}
+    for l in range(cfg.l_max + 1):
+        agg = G.scatter_sum(g, msgs[l], n) / cfg.avg_neighbors**0.5
+        mixed = jnp.einsum("nci,cd->ndi", agg, lp[f"self_{l}"])
+        out[l] = feats[l] + mixed
+    # Gated nonlinearity: scalars → silu; higher l scaled by sigmoid gates.
+    scal = out[0][:, :, 0]
+    gates = jax.nn.sigmoid(scal @ lp["gate_w"]).reshape(
+        n, cfg.l_max, C)
+    new = {0: jax.nn.silu(scal)[:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        new[l] = out[l] * gates[:, l - 1][:, :, None]
+    return new
+
+
+def apply(params, cfg: NequIPConfig, g: G.Graph):
+    n = g.node_mask.shape[0]
+    C = cfg.d_hidden
+    feats = {0: (g.node_feat @ params["embed"])[:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        feats[l] = jnp.zeros((n, C, e3.dim(l)), feats[0].dtype)
+
+    xi, xj = G.gather_dst(g, g.positions), G.gather_src(g, g.positions)
+    diff = xi - xj
+    r = jnp.sqrt(jnp.sum(diff * diff, -1) + 1e-12)
+    rhat = diff / r[:, None]
+    rbf = G.radial_basis(r, cfg.n_rbf, cfg.cutoff)
+    # Zero-length edges (self-loops / padding) have no direction — their SH
+    # would be a non-equivariant constant; mask them out.
+    ok = (r > 1e-6)[:, None]
+    sh_edges = {l: (e3.sh(l, rhat) * ok).astype(feats[0].dtype)
+                for l in range(cfg.l_max + 1)}
+
+    for i in range(cfg.n_layers):
+        feats = _interact(params[f"layer_{i}"], cfg, g, feats, rbf,
+                          sh_edges, n)
+    return feats
+
+
+def loss_fn(params, cfg: NequIPConfig, g: G.Graph):
+    feats = apply(params, cfg, g)
+    scal = feats[0][:, :, 0]
+    out = jax.nn.silu(scal @ params["head0"]) @ params["head1"]
+    if cfg.task == "node_class":
+        mask = g.node_mask & (g.labels >= 0)
+        labels = jnp.where(mask, g.labels, 0)
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], 1)[:, 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    else:
+        n_graphs = int(g.labels.shape[0])
+        ids = g.graph_ids if g.graph_ids is not None else \
+            jnp.zeros((out.shape[0],), jnp.int32)
+        energy = jax.ops.segment_sum(out[:, 0] * g.node_mask, ids,
+                                     num_segments=n_graphs)
+        loss = jnp.mean((energy - g.labels.astype(jnp.float32)) ** 2)
+    return loss, {"loss": loss}

@@ -1,0 +1,217 @@
+"""FFN blocks: dense (GELU / gated) and chunked GShard-style MoE.
+
+The MoE dispatch is the capacity-factor one-hot einsum (GShard/MaxText
+"dropping" strategy) evaluated over token *chunks* under ``lax.scan`` so the
+(chunk, E, C) dispatch tensor stays VMEM-scale on every device regardless of
+the global batch (DESIGN.md §5). Experts shard over the mesh "model" axis
+(EP) when E divides it — deepseek-v3; otherwise experts stay replicated and
+the expert FFN dim shards (granite). Routing is softmax top-k with
+renormalization + optional shared experts (deepseek), and a load-balance
+auxiliary loss (Switch-style) returned to the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import common as cm
+from repro.models.common import param
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    chunk: int = 4096          # global tokens per dispatch chunk
+    shard_experts: bool = True  # EP over "expert" axis vs FF sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    gated: bool = True          # SwiGLU/GeGLU vs plain GELU
+    act: str = "silu"
+    moe: MoEConfig | None = None
+
+
+def _act(x, kind):
+    return jax.nn.silu(x) if kind == "silu" else cm.gelu(x)
+
+
+# ---------------------------------------------------------------- dense
+
+def init_dense_ffn(key, cfg: FFNConfig, dtype, d_ff=None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": param(ks[0], (D, F), ("embed_fsdp", "mlp"), dtype=dtype),
+        "w_out": param(ks[1], (F, D), ("mlp", "embed_fsdp"), dtype=dtype),
+    }
+    if cfg.gated:
+        p["w_gate"] = param(ks[2], (D, F), ("embed_fsdp", "mlp"), dtype=dtype)
+    return p
+
+
+def dense_ffn(p, cfg: FFNConfig, x):
+    dt = x.dtype
+    # Re-pin the FSDP weight sharding at the use site: inside a scanned
+    # layer body this stops GSPMD from un-sharding the whole carried stack
+    # (the per-layer all-gather then happens inside the loop and is freed —
+    # FSDP semantics instead of a hoisted full-stack gather).
+    c = sharding.constrain
+    w_in = c(p["w_in"], "embed_fsdp", "mlp")
+    w_out = c(p["w_out"], "mlp", "embed_fsdp")
+    h = jnp.einsum("...d,df->...f", x, w_in.astype(dt))
+    if cfg.gated:
+        g = jnp.einsum("...d,df->...f", x,
+                       c(p["w_gate"], "embed_fsdp", "mlp").astype(dt))
+        h = _act(g, cfg.act) * h
+    else:
+        h = _act(h, cfg.act)
+    # 2D input = MoE shared-expert path (tokens merged over data+model);
+    # 3D input = the regular layer FFN (batch over data).
+    lead = ("moe_tokens",) if h.ndim == 2 else \
+        ("batch",) + (None,) * (h.ndim - 2)
+    h = sharding.constrain(h, *lead, "mlp")
+    return jnp.einsum("...f,fd->...d", h, w_out.astype(dt))
+
+
+# ------------------------------------------------------------------ MoE
+
+def init_moe_ffn(key, cfg: FFNConfig, dtype):
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    e_axis = "expert" if m.shard_experts else None
+    f_axis = None if m.shard_experts else "expert_mlp"
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": param(ks[0], (D, E), ("embed_fsdp", None), dtype=jnp.float32),
+        "w_gate": param(ks[1], (E, D, F), (e_axis, "embed_fsdp", f_axis),
+                        dtype=dtype),
+        "w_in": param(ks[2], (E, D, F), (e_axis, "embed_fsdp", f_axis),
+                      dtype=dtype),
+        "w_out": param(ks[3], (E, F, D), (e_axis, f_axis, "embed_fsdp"),
+                       dtype=dtype),
+    }
+    if m.n_shared:
+        shared_cfg = dataclasses.replace(cfg, d_ff=m.d_ff_expert * m.n_shared)
+        p["shared"] = init_dense_ffn(ks[4], shared_cfg, dtype)
+    return p
+
+
+def _dispatch_chunk(xc, p, cfg: FFNConfig):
+    """One GShard dispatch chunk. xc: (n, D) → (out (n, D), aux ()).
+
+    ``n`` merges (batch, seq-slice) so its sharding is the compatible merge
+    of (batch@data, seq@model) — no resharding against the residual layout.
+    """
+    m = cfg.moe
+    n, D = xc.shape
+    E, K = m.n_experts, m.top_k
+    # Use-site weight sharding pins (see dense_ffn).
+    e_ax = "expert" if m.shard_experts else None
+    f_ax = None if m.shard_experts else "expert_mlp"
+    c = sharding.constrain
+    w_gate = c(p["w_gate"], e_ax, "embed_fsdp", f_ax)
+    w_in = c(p["w_in"], e_ax, "embed_fsdp", f_ax)
+    w_out = c(p["w_out"], e_ax, f_ax, "embed_fsdp")
+    if n <= 1024:
+        # Decode/smoke-sized chunks run dropless (capacity = chunk size);
+        # capacity dropping is a *throughput* trade only meaningful at scale.
+        C = n
+    else:
+        C = max(int(n * K * m.capacity_factor) // E, 1)
+
+    logits = jnp.einsum("nd,de->ne", xc.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)       # (n, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss (fraction routed × mean prob).
+    frac = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    # Position-in-expert via assignment-order cumsum (tokens-major).
+    assign = jax.nn.one_hot(expert_idx.reshape(-1), E,
+                            dtype=jnp.int32)              # (n*K, E)
+    pos_flat = jnp.sum((jnp.cumsum(assign, axis=0) - assign) * assign,
+                       axis=-1)                           # (n*K,)
+    pos = pos_flat.reshape(n, K)
+    keep = pos < C
+
+    disp = jnp.zeros((n, E, C), jnp.float32)
+    tok = jnp.arange(n)[:, None].repeat(K, 1)
+    disp = disp.at[tok, expert_idx, jnp.minimum(pos, C - 1)].add(
+        keep.astype(jnp.float32))
+    disp = sharding.constrain(disp, "moe_tokens", None, None)
+    combine = jnp.zeros((n, E, C), jnp.float32)
+    combine = combine.at[tok, expert_idx, jnp.minimum(pos, C - 1)].add(
+        jnp.where(keep, gate_vals, 0.0))
+
+    dt = xc.dtype
+    expert_in = jnp.einsum("nec,nd->ecd", disp.astype(dt), xc)
+    expert_in = sharding.constrain(expert_in, "expert", None, "embed")
+    g = jnp.einsum("ecd,edf->ecf", expert_in, w_gate.astype(dt))
+    h = jnp.einsum("ecd,edf->ecf", expert_in, w_in.astype(dt))
+    h = _act(g, cfg.act) * h
+    out_e = jnp.einsum("ecf,efd->ecd", h, w_out.astype(dt))
+    out_e = sharding.constrain(out_e, "expert", None, "embed")
+    out = jnp.einsum("nec,ecd->nd", combine.astype(dt), out_e)
+
+    if m.n_shared:
+        shared_cfg = dataclasses.replace(cfg, d_ff=m.d_ff_expert * m.n_shared)
+        out = out + dense_ffn(p["shared"], shared_cfg, xc)
+    return out, aux
+
+
+def moe_ffn(p, cfg: FFNConfig, x):
+    """x: (B, S, D) → ((B, S, D), aux_loss ()).
+
+    Chunking runs over the SEQUENCE dim with the batch intact, so every
+    chunk is (B@data × s_chunk@model) — the flattened token axis inherits
+    the (data, model) sharding from a *compatible* reshape instead of a
+    layout fight with the sequence-parallel residual (DESIGN.md §5).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    sc = max(1, min(S, (m.chunk + B - 1) // B))
+    pad = -S % sc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    xt = x.reshape(B, Sp // sc, sc, D).swapaxes(0, 1)  # (n_chunks, B, sc, D)
+    xt = sharding.constrain(xt, None, "batch", "act_seq", None)
+
+    @jax.checkpoint
+    def body(_, xc):
+        # Checkpointed: backward recomputes the dispatch/expert
+        # intermediates per chunk instead of stacking them for every chunk.
+        bsz, scc, _ = xc.shape
+        out, aux = _dispatch_chunk(xc.reshape(bsz * scc, D), p, cfg)
+        return None, (out.reshape(bsz, scc, D), aux)
+
+    _, (out, aux) = jax.lax.scan(body, None, xt)
+    out = out.swapaxes(0, 1).reshape(B, Sp, D)[:, :S]
+    return out, jnp.mean(aux)
+
+
+def init_ffn(key, cfg: FFNConfig, dtype):
+    if cfg.moe:
+        return init_moe_ffn(key, cfg, dtype)
+    return init_dense_ffn(key, cfg, dtype)
+
+
+def ffn(p, cfg: FFNConfig, x):
+    """Unified FFN: returns (out, aux_loss)."""
+    if cfg.moe:
+        return moe_ffn(p, cfg, x)
+    return dense_ffn(p, cfg, x), jnp.float32(0.0)

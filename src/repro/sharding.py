@@ -1,0 +1,165 @@
+"""Logical-axis sharding: MaxText-style rules mapping names → mesh axes.
+
+Models annotate params and activations with *logical* axis names
+("batch", "embed", "heads", "expert", ...). The launcher installs a rules
+table + mesh; `constrain` then becomes a real with_sharding_constraint.
+Outside any mesh context every annotation is a no-op, so models run
+unchanged on a single host.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+# Default rules for the production (pod, data, model) / (data, model) mesh.
+# "dp" axes shard over data(+pod); "tp" axes over model. The KG engine and
+# the MoE token axis shard over everything.
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "all_devices": ("pod", "data", "model"),
+    "fsdp": ("pod", "data"),
+    "embed": None,
+    "embed_fsdp": ("pod", "data"),     # FSDP shard of the embed dim
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "q_lora": "model",
+    "kv_lora": None,
+    "mlp": "model",
+    # Experts shard over the FULL (data, model) mesh (256 experts → 1 per
+    # device): EP instead of FSDP for expert weights — no per-layer weight
+    # all-gather; tokens move via the dispatch all-to-all instead (§Perf
+    # iteration on the deepseek train cell).
+    "expert": ("data", "model"),
+    "expert_mlp": "model",             # granite: experts replicated, F sharded
+    "seq": None,
+    "act_seq": "model",                # sequence-parallel residual stream
+    "kv_seq": "model",                 # decode: split-K over cache length
+    "moe_tokens": ("pod", "data", "model"),
+    "graph_nodes": ("pod", "data"),
+    # Edges shard over the SAME axes as nodes (vertex-replicated-per-shard,
+    # edge-partitioned): gathers become one all-gather of the (N, d) node
+    # array per layer instead of SPMD replicating the (E, d) messages.
+    "graph_edges": ("pod", "data"),
+    "table_vocab": "model",
+    "candidates": ("pod", "data", "model"),
+    "stats": None,
+}
+
+
+def install(mesh: Mesh, rules: dict[str, Any] | None = None):
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES if rules is None else rules)
+
+
+def clear():
+    _state.mesh = None
+    _state.rules = None
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict[str, Any] | None = None):
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    install(mesh, rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def active() -> bool:
+    return getattr(_state, "mesh", None) is not None
+
+
+def _axis_for(name: str | None):
+    if name is None:
+        return None
+    rules = _state.rules
+    ax = rules.get(name)
+    if ax is None:
+        return None
+    mesh_axes = _state.mesh.axis_names
+    if isinstance(ax, tuple):
+        avail = tuple(a for a in ax if a in mesh_axes)
+        return avail if avail else None
+    return ax if ax in mesh_axes else None
+
+
+def spec(*names: str | None, shape: tuple[int, ...] | None = None) -> P:
+    """PartitionSpec for the given logical names under the active rules.
+
+    When ``shape`` is given, mesh axes that do not divide the corresponding
+    dimension are dropped (maximal divisible prefix for tuple mappings) —
+    e.g. 8 attention heads on a 16-way model axis fall back to replicated.
+    """
+    if not active():
+        return P()
+    mesh = _state.mesh
+    used: set[str] = set()
+    parts = []
+    for i, n in enumerate(names):
+        dim = None if shape is None else shape[i]
+        ax = _axis_for(n)
+        if isinstance(ax, tuple):
+            ax = tuple(a for a in ax if a not in used)
+            if dim is not None:
+                pref, prod = [], 1
+                for a in ax:
+                    if dim % (prod * mesh.shape[a]) == 0:
+                        pref.append(a)
+                        prod *= mesh.shape[a]
+                    else:
+                        break
+                ax = tuple(pref)
+            used.update(ax)
+            parts.append(ax if ax else None)
+        else:
+            if ax in used:
+                ax = None
+            if ax is not None and dim is not None and \
+                    dim % mesh.shape[ax] != 0:
+                ax = None
+            if ax is not None:
+                used.add(ax)
+            parts.append(ax)
+    return P(*parts)
+
+
+def sharding(*names: str | None,
+             shape: tuple[int, ...] | None = None) -> NamedSharding | None:
+    if not active():
+        return None
+    return NamedSharding(_state.mesh, spec(*names, shape=shape))
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    """Annotate activation sharding; no-op without an installed mesh."""
+    if not active() or len(names) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, sharding(*names, shape=tuple(x.shape)))
+
+
+def tree_shardings(axes_tree, shape_tree=None):
+    """Map a tree of logical-axis tuples to NamedShardings (or None).
+
+    With ``shape_tree`` (matching ShapeDtypeStructs), shardings are
+    divisibility-checked per leaf.
+    """
+    if not active():
+        return None
+    if shape_tree is None:
+        return jax.tree_util.tree_map(
+            lambda axes: sharding(*axes), axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda axes, s: sharding(*axes, shape=tuple(s.shape)),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple))

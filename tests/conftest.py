@@ -1,0 +1,5 @@
+import os
+
+# Smoke tests and benches see the single real device; only the dry-run
+# forces 512 placeholder devices (and does so in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,62 @@
+"""Distributed engine == single-device engine (8 placeholder devices).
+
+Runs in a subprocess because the device count must be fixed before jax
+initializes (the main test process keeps 1 device).
+"""
+import subprocess
+import sys
+import os
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.data import kg_synth
+from repro.core import engine, distributed
+from repro.core.types import EngineConfig
+
+wl = kg_synth.tiny_workload(seed=3, n_queries=5)
+P = wl.store.keys.shape[0]
+lists = []
+for p in range(P):
+    n = int(wl.store.lengths[p])
+    lists.append((np.asarray(wl.store.keys[p][:n]),
+                  np.asarray(wl.store.scores[p][:n])))
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+skg = distributed.build_sharded_kg(lists, wl.relax, 8)
+cfg = EngineConfig(block=8, k=5, grid_bins=128)
+for i in range(len(wl.queries)):
+    q = jnp.asarray(wl.queries[i])
+    rd = distributed.run_query_sharded(skg, q, cfg, "trinit", mesh)
+    r1 = engine.run_query(wl.store, wl.relax, q, cfg, "trinit")
+    assert np.allclose(np.asarray(rd.scores), np.asarray(r1.scores),
+                       rtol=1e-5), (i, rd.scores, r1.scores)
+    sd = distributed.run_query_sharded(skg, q, cfg, "specqp", mesh)
+    s1 = engine.run_query(wl.store, wl.relax, q, cfg, "specqp")
+    assert np.array_equal(np.asarray(sd.relax_mask),
+                          np.asarray(s1.relax_mask)), i
+
+# batched sharded entrypoint
+fn = distributed.make_batched_sharded_fn(cfg, "specqp", mesh)
+qs = jnp.asarray(wl.queries[:4])
+batch = fn(skg.stores, skg.relax, skg.global_stats, qs)
+for i in range(4):
+    s1 = engine.run_query(wl.store, wl.relax, qs[i], cfg, "specqp")
+    assert np.allclose(np.asarray(batch.scores[i]), np.asarray(s1.scores),
+                       rtol=1e-5), i
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_engine_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,105 @@
+"""System behaviour: TriniT exactness, Spec-QP quality, counters, planning."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data import kg_synth
+from repro.core import engine, plangen
+from repro.core.types import EngineConfig
+
+CFG = EngineConfig(block=16, k=5, grid_bins=128)
+
+
+@pytest.fixture(scope="module", params=[0, 1, 2])
+def workload(request):
+    return kg_synth.tiny_workload(seed=request.param, n_queries=10)
+
+
+def test_trinit_is_exact_topk(workload):
+    """TriniT must return the TRUE top-k (it processes all relaxations)."""
+    wl = workload
+    for i in range(len(wl.queries)):
+        q = jnp.asarray(wl.queries[i])
+        bk, bs = engine.naive_full_scan(wl.store, wl.relax, q, CFG.k,
+                                        wl.n_entities)
+        res = engine.run_query(wl.store, wl.relax, q, CFG, "trinit")
+        np.testing.assert_allclose(np.asarray(bs), np.asarray(res.scores),
+                                   rtol=1e-5, err_msg=f"query {i}")
+
+
+def test_specqp_quality_and_savings(workload):
+    """Paper claims: decent precision, fewer pulls, some queries pruned."""
+    wl = workload
+    precs, pruned, ratio = [], 0, []
+    for i in range(len(wl.queries)):
+        q = jnp.asarray(wl.queries[i])
+        rt = engine.run_query(wl.store, wl.relax, q, CFG, "trinit")
+        rs = engine.run_query(wl.store, wl.relax, q, CFG, "specqp")
+        tk = {int(k) for k in np.asarray(rt.keys) if k >= 0}
+        sk = {int(k) for k in np.asarray(rs.keys) if k >= 0}
+        precs.append(len(tk & sk) / max(len(tk), 1))
+        T = int((np.asarray(q) >= 0).sum())
+        pruned += int(np.asarray(rs.relax_mask).sum() < T)
+        ratio.append(float(rs.n_pulled) / max(float(rt.n_pulled), 1))
+        # Spec-QP never pulls MORE than TriniT (it processes a subset).
+        assert int(rs.n_pulled) <= int(rt.n_pulled) + CFG.block
+    assert np.mean(precs) >= 0.6
+    assert pruned >= 1, "planner never pruned on this workload"
+
+
+def test_join_only_subset_of_trinit(workload):
+    """No-relaxation answers are a subset of the relaxed answer space."""
+    wl = workload
+    q = jnp.asarray(wl.queries[0])
+    rj = engine.run_query(wl.store, wl.relax, q, CFG, "join_only")
+    rt = engine.run_query(wl.store, wl.relax, q, CFG, "trinit")
+    # every join_only answer's score ≤ trinit's answer at same rank
+    js = np.asarray(rj.scores)
+    ts = np.asarray(rt.scores)
+    valid = np.isfinite(js)
+    assert np.all(js[valid] <= ts[valid] + 1e-5)
+
+
+def test_padded_queries_consistent(workload):
+    """A 2-pattern query padded to T=3 equals the unpadded computation."""
+    wl = workload
+    rows = [r for r in wl.queries if (r >= 0).sum() == 2]
+    if not rows:
+        pytest.skip("no 2-pattern query in workload")
+    q3 = jnp.asarray(rows[0])
+    q2 = jnp.asarray(rows[0][:2])
+    r3 = engine.run_query(wl.store, wl.relax, q3, CFG, "trinit")
+    r2 = engine.run_query(wl.store, wl.relax, q2, CFG, "trinit")
+    np.testing.assert_allclose(np.asarray(r3.scores), np.asarray(r2.scores),
+                               rtol=1e-5)
+
+
+def test_plan_is_boolean_mask_over_active(workload):
+    wl = workload
+    q = jnp.asarray(wl.queries[0])
+    mask = plangen.plan(wl.store, wl.relax, q, CFG.k, CFG.grid_bins)
+    active = np.asarray(q) >= 0
+    assert mask.dtype == jnp.bool_
+    assert not np.any(np.asarray(mask)[~active])
+
+
+def test_batched_equals_single(workload):
+    wl = workload
+    qs = jnp.asarray(wl.queries[:4])
+    batch = engine.run_query_batch(wl.store, wl.relax, qs, CFG, "specqp")
+    for i in range(4):
+        single = engine.run_query(wl.store, wl.relax, qs[i], CFG, "specqp")
+        np.testing.assert_allclose(np.asarray(batch.scores[i]),
+                                   np.asarray(single.scores), rtol=1e-5)
+
+
+def test_pallas_lookup_path_matches_ref():
+    """Engine with use_pallas=True (interpret) equals the jnp path."""
+    wl = kg_synth.tiny_workload(seed=4, n_queries=3)
+    cfg_p = EngineConfig(block=16, k=5, grid_bins=128, use_pallas=True)
+    for i in range(3):
+        q = jnp.asarray(wl.queries[i])
+        r1 = engine.run_query(wl.store, wl.relax, q, CFG, "trinit")
+        r2 = engine.run_query(wl.store, wl.relax, q, cfg_p, "trinit")
+        np.testing.assert_allclose(np.asarray(r1.scores),
+                                   np.asarray(r2.scores), rtol=1e-5)

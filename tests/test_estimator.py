@@ -1,0 +1,50 @@
+"""Estimator: exact cardinalities + PLANGEN inputs (§3.1–3.2)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import estimator, kg
+from repro.core.types import PAD_KEY
+
+
+def _store_from(lists):
+    return kg.build_store([(np.asarray(k, np.int32),
+                            np.asarray(s, np.float64)) for k, s in lists])
+
+
+def test_star_join_cardinality_exact():
+    store = _store_from([
+        ([1, 2, 3, 4], [4, 3, 2, 1]),
+        ([2, 3, 5], [9, 5, 1]),
+        ([3, 2, 9, 11], [7, 3, 2, 1]),
+    ])
+    pids = jnp.asarray([0, 1, 2])
+    active = jnp.asarray([True, True, True])
+    n = estimator.star_join_cardinality(store, pids, active)
+    assert float(n) == 2.0  # {2, 3}
+    n2 = estimator.star_join_cardinality(
+        store, jnp.asarray([0, 1, 0]), jnp.asarray([True, True, False]))
+    assert float(n2) == 2.0  # {2, 3} again (third inactive)
+
+
+def test_relaxed_cardinality_swaps_pattern():
+    store = _store_from([
+        ([1, 2, 3], [3, 2, 1]),
+        ([2, 3], [5, 1]),
+        ([1, 9], [2, 1]),     # relaxation candidate for pattern 1
+    ])
+    pids = jnp.asarray([0, 1])
+    active = jnp.asarray([True, True])
+    n = estimator.relaxed_join_cardinality(
+        store, pids, active, jnp.int32(1), jnp.int32(2))
+    assert float(n) == 1.0  # {1}
+    n_pad = estimator.relaxed_join_cardinality(
+        store, pids, active, jnp.int32(1), PAD_KEY)
+    assert float(n_pad) == 0.0
+
+
+def test_member_handles_padding():
+    store = _store_from([([5, 1, 7], [3, 2, 1])])
+    probes = jnp.asarray([1, 5, 7, 8, PAD_KEY], jnp.int32)
+    got = estimator.member(store.sorted_keys[0], probes)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  [True, True, True, False, False])

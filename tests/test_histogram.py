@@ -1,0 +1,85 @@
+"""Unit + property tests for the two-bucket score-distribution model (§3.1)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import histogram, kg
+
+
+def _stats(m=100.0, sigma=0.3, frac_head=0.8):
+    S_m = 50.0
+    return jnp.asarray([m, sigma, frac_head * S_m, S_m], jnp.float32)
+
+
+def test_pattern_pmf_normalized():
+    pmf = histogram.pattern_pmf(_stats(), 1.0, 256)
+    assert abs(float(jnp.sum(pmf)) - 1.0) < 1e-5
+    assert float(jnp.min(pmf)) >= 0.0
+
+
+@given(sigma=st.floats(0.01, 0.95), w=st.floats(0.05, 1.0),
+       frac=st.floats(0.05, 0.95))
+@settings(max_examples=25, deadline=None)
+def test_pmf_support_scales_with_weight(sigma, w, frac):
+    pmf = histogram.pattern_pmf(_stats(sigma=sigma, frac_head=frac), w, 256)
+    centers = (np.arange(257) + 0.5) / 256
+    mass_above = float(jnp.sum(jnp.where(centers > w + 1.5 / 256, pmf, 0.0)))
+    assert mass_above < 1e-6  # support is [0, w]
+    assert abs(float(jnp.sum(pmf)) - 1.0) < 1e-4
+
+
+def test_convolution_mean_additivity():
+    """E[X+Y] == E[X] + E[Y] for the grid convolution."""
+    G = 256
+    p1 = histogram.pattern_pmf(_stats(sigma=0.2), 1.0, G)
+    p2 = histogram.pattern_pmf(_stats(sigma=0.5), 0.7, G)
+    conv = histogram.convolve_pmfs(jnp.stack([p1, p2]),
+                                   jnp.array([True, True]))
+    def mean(pmf, unit):
+        c = (np.arange(pmf.shape[0])) / unit
+        return float(jnp.sum(pmf * c))
+    m1, m2 = mean(p1, G), mean(p2, G)
+    mc = mean(conv, G)
+    assert abs(mc - (m1 + m2)) < 2.0 / G
+
+
+def test_convolution_skips_inactive():
+    G = 128
+    p1 = histogram.pattern_pmf(_stats(), 1.0, G)
+    p2 = histogram.pattern_pmf(_stats(sigma=0.6), 1.0, G)
+    both = histogram.convolve_pmfs(jnp.stack([p1, p2]),
+                                   jnp.array([True, False]))
+    only = histogram.convolve_pmfs(jnp.stack([p1, p1]),
+                                   jnp.array([True, False]))
+    np.testing.assert_allclose(np.asarray(both), np.asarray(only), atol=1e-7)
+
+
+@given(q1=st.floats(0.01, 0.99), q2=st.floats(0.01, 0.99))
+@settings(max_examples=25, deadline=None)
+def test_quantile_monotone(q1, q2):
+    pmf = histogram.pattern_pmf(_stats(), 1.0, 256)
+    v1 = float(histogram.pmf_quantile(pmf, jnp.float32(q1), 256))
+    v2 = float(histogram.pmf_quantile(pmf, jnp.float32(q2), 256))
+    if q1 <= q2:
+        assert v1 <= v2 + 1e-6
+    else:
+        assert v2 <= v1 + 1e-6
+
+
+def test_order_statistic_below_rank_returns_zero():
+    pmf = histogram.pattern_pmf(_stats(), 1.0, 256)
+    e = histogram.expected_order_statistic(pmf, jnp.float32(3.0),
+                                           jnp.float32(10.0), 256)
+    assert float(e) == 0.0
+
+
+def test_compute_pattern_stats_80_20():
+    scores = np.sort(np.random.default_rng(0).pareto(1.2, 500))[::-1]
+    scores = (scores / scores.max()).astype(np.float32)
+    m, sigma, S_r, S_m = kg.compute_pattern_stats(scores, len(scores))
+    assert m == 500
+    cum = np.cumsum(scores)
+    r = int(np.searchsorted(cum, 0.8 * cum[-1]))
+    assert abs(S_r - cum[r]) / cum[-1] < 1e-3
+    assert abs(S_m - cum[-1]) / cum[-1] < 1e-3
