@@ -42,7 +42,7 @@ def run_dataset(name: str, *, list_len: int = 512, block: int = 32,
         # timings are steady-state serving latency, like the paper's
         # warm-cache protocol (§4.4: average of the last runs).
         q0 = jnp.asarray(wl.queries[0])
-        for mode in ("trinit", "specqp"):
+        for mode in ("trinit", "specqp", "specqp_pattern"):
             jax.block_until_ready(
                 engine.run_query(wl.store, wl.relax, q0, cfg, mode).scores)
         rows = []
@@ -58,10 +58,16 @@ def run_dataset(name: str, *, list_len: int = 512, block: int = 32,
             rs = engine.run_query(wl.store, wl.relax, q, cfg, "specqp")
             jax.block_until_ready(rs.scores)
             t_sp = time.time() - t0
+            # Ablation: the paper's coarser per-pattern speculation.
+            rp = engine.run_query(wl.store, wl.relax, q, cfg,
+                                  "specqp_pattern")
+            jax.block_until_ready(rp.scores)
 
             tk = [int(x) for x in np.asarray(rt.keys) if x >= 0]
             sk = [int(x) for x in np.asarray(rs.keys) if x >= 0]
+            pk = [int(x) for x in np.asarray(rp.keys) if x >= 0]
             prec = len(set(tk) & set(sk)) / max(len(tk), 1)
+            prec_pp = len(set(tk) & set(pk)) / max(len(tk), 1)
             ts, ss = np.asarray(rt.scores), np.asarray(rs.scores)
             ok = np.isfinite(ts) & np.isfinite(ss)
             err = np.abs(ts[ok] - ss[ok])
@@ -80,16 +86,19 @@ def run_dataset(name: str, *, list_len: int = 512, block: int = 32,
                 if not np.allclose(np.asarray(ms), np.asarray(full_s),
                                    rtol=1e-5):
                     required.append(t)
-            plan = [t for t in range(T)
-                    if bool(np.asarray(rs.relax_mask)[t])]
+            # Per-pattern view of the (T, R) per-relaxation plan.
+            plan_tr = np.asarray(rs.relax_mask)
+            plan = [t for t in range(T) if bool(plan_tr[t].any())]
 
             rows.append(dict(
-                T=T, prec=prec, err_mean=float(err.mean()) if len(err) else 0,
+                T=T, prec=prec, prec_pp=prec_pp,
+                err_mean=float(err.mean()) if len(err) else 0,
                 err_pct=float((err / denom).mean()) if len(err) else 0,
                 n_required=len(required), plan_exact=plan == required,
                 n_relaxed=len(plan),
                 t_trinit=t_tr, t_specqp=t_sp,
                 pulled_t=int(rt.n_pulled), pulled_s=int(rs.n_pulled),
+                pulled_pp=int(rp.n_pulled),
                 ans_t=int(rt.n_answers), ans_s=int(rs.n_answers)))
         results[k] = rows
     return wl, results
@@ -155,10 +164,11 @@ def fig6to9_efficiency(results_by_ds):
     out = ["\n### Figs 6–9 — runtime + answer objects, TriniT (T) vs "
            "Spec-QP (S)"]
     for ds, res in results_by_ds.items():
-        out.append(f"\n**{ds} — grouped by #TP**\n")
+        out.append(f"\n**{ds} — grouped by #TP** (S/pat = per-pattern-plan "
+                   "ablation)\n")
         out.append("| k | group | time T (ms) | time S (ms) | pulled T | "
-                   "pulled S | answers T | answers S |")
-        out.append("|---|---|---|---|---|---|---|---|")
+                   "pulled S/pat | pulled S | answers T | answers S |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
         for k in KS:
             for t in sorted({r["T"] for r in res[k]}):
                 rows = [r for r in res[k] if r["T"] == t]
@@ -167,6 +177,7 @@ def fig6to9_efficiency(results_by_ds):
                     f"| {np.mean([r['t_trinit'] for r in rows])*1e3:.0f} "
                     f"| {np.mean([r['t_specqp'] for r in rows])*1e3:.0f} "
                     f"| {np.mean([r['pulled_t'] for r in rows]):.0f} "
+                    f"| {np.mean([r['pulled_pp'] for r in rows]):.0f} "
                     f"| {np.mean([r['pulled_s'] for r in rows]):.0f} "
                     f"| {np.mean([r['ans_t'] for r in rows]):.0f} "
                     f"| {np.mean([r['ans_s'] for r in rows]):.0f} |")

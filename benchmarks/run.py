@@ -41,6 +41,15 @@ def main() -> None:
             print(f"fig6_runtime_specqp_{ds}_k{k},{t_sp:.0f},"
                   f"{t_tr/max(t_sp,1e-9):.2f}")
             print(f"fig6_pull_ratio_{ds}_k{k},{t_sp:.0f},{pull_ratio:.2f}")
+            # per-relaxation (T,R) plan vs the per-pattern ablation: mean
+            # pulls of Spec-QP relative to the coarser plan (≤ 1.0 expected)
+            pp = np.mean([r["pulled_pp"] for r in rows])
+            sp = np.mean([r["pulled_s"] for r in rows])
+            print(f"fig6_perrelax_vs_pattern_pull_{ds}_k{k},{t_sp:.0f},"
+                  f"{sp / max(pp, 1):.3f}")
+            prec_pp = np.mean([r["prec_pp"] for r in rows])
+            print(f"table2_precision_patternplan_{ds}_k{k},{t_sp:.0f},"
+                  f"{prec_pp:.3f}")
             acc_rows = [r for r in rows]
             exact = np.mean([r["plan_exact"] for r in acc_rows])
             print(f"table3_prediction_{ds}_k{k},{t_sp:.0f},{exact:.3f}")

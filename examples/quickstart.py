@@ -14,18 +14,20 @@ from repro.core.types import EngineConfig
 def main():
     wl = kg_synth.tiny_workload(seed=1, n_queries=6, list_len=128)
     cfg = EngineConfig(block=16, k=5, grid_bins=128)
-    q = jnp.asarray(wl.queries[3])
-    T = int((wl.queries[3] >= 0).sum())
-    print(f"query patterns: {wl.queries[3][:T]} (k={cfg.k})")
+    q = jnp.asarray(wl.queries[4])
+    T = int((wl.queries[4] >= 0).sum())
+    print(f"query patterns: {wl.queries[4][:T]} (k={cfg.k})")
 
-    # What the planner estimates (§3.1–3.2):
+    # What the planner estimates (§3.1–3.2). e_q1 is (T, R): one E_Q'(1)
+    # per (pattern, relaxation) pair; the plan is the matching (T, R) mask.
     active = q != -1
     e_qk, e_q1 = estimator.query_score_estimates(
         wl.store, wl.relax, q, active, cfg.k, cfg.grid_bins)
-    print(f"E_Q(k) = {float(e_qk):.3f}   per-pattern E_Q'(1) = "
-          f"{np.round(np.asarray(e_q1)[:T], 3)}")
+    print(f"E_Q(k) = {float(e_qk):.3f}   best E_Q'(1) per pattern = "
+          f"{np.round(np.asarray(e_q1).max(axis=1)[:T], 3)}")
     mask = plangen.plan(wl.store, wl.relax, q, cfg.k, cfg.grid_bins)
-    print(f"plan (relax?): {np.asarray(mask)[:T]}")
+    print(f"plan (T,R) relax mask:\n{np.asarray(mask).astype(int)[:T]}")
+    print(f"patterns relaxed: {np.asarray(mask).any(axis=1)[:T]}")
 
     rt = engine.run_query(wl.store, wl.relax, q, cfg, "trinit")
     rs = engine.run_query(wl.store, wl.relax, q, cfg, "specqp")

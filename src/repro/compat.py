@@ -1,0 +1,87 @@
+"""Version-tolerant wrappers for jax APIs that moved between releases.
+
+The repo targets the newest stable jax but must run on the baked-image
+toolchain (currently 0.4.x). Every API whose name/location/signature
+changed between those versions is funneled through here so call sites
+stay on the modern spelling:
+
+* ``jax.shard_map`` (new) vs ``jax.experimental.shard_map.shard_map``
+  (old; ``check_vma`` was called ``check_rep``).
+* ``jax.make_mesh(..., axis_types=...)`` / ``jax.sharding.AxisType`` —
+  explicit axis types only exist on newer jax; older versions get the
+  default (auto) behavior, which is what every caller wants.
+* ``jax.sharding.AbstractMesh`` — newer: ``(axis_sizes, axis_names)``;
+  older: a single ``((name, size), ...)`` shape tuple.
+* ``jax.lax.optimization_barrier`` — has no differentiation rule on older
+  jax; ``opt_barrier`` supplies the (identity-with-barrier) custom vjp.
+* Pallas-TPU ``CompilerParams`` (new) vs ``TPUCompilerParams`` (old).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with fallback to the experimental module."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def _auto_axis_types(n: int):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit-auto axis types where supported."""
+    axis_types = _auto_axis_types(len(axis_names))
+    if axis_types is not None:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """Device-free mesh for sharding-spec logic (no backend needed)."""
+    AbstractMesh = jax.sharding.AbstractMesh
+    axis_types = _auto_axis_types(len(axis_names))
+    if axis_types is not None:
+        try:
+            return AbstractMesh(axis_shapes, axis_names,
+                                axis_types=axis_types)
+        except TypeError:
+            pass
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+@jax.custom_vjp
+def opt_barrier(x):
+    """Differentiable ``optimization_barrier`` (older jax lacks the rule)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

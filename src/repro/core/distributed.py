@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.types import (TripleStore, RelaxTable, EngineResult,
                               EngineConfig, PAD_KEY)
 from repro.core import kg as kglib
@@ -100,22 +101,30 @@ def _shard_body(store: TripleStore, relax: RelaxTable,
                 cfg: EngineConfig, mode: str, axis_names: tuple[str, ...]):
     """Runs on one device under shard_map: plan globally, execute locally."""
     active = pattern_ids != PAD_KEY
+    R = relax.ids.shape[1]
     if mode == "trinit":
-        mask = plangen.trinit_plan(pattern_ids)
-    elif mode == "specqp":
+        mask = plangen.trinit_plan(pattern_ids, R)
+    elif mode in ("specqp", "specqp_pattern"):
         n_loc, n_rel_loc = estimator.exact_cardinalities(
             store, relax, pattern_ids, active)
         n = n_loc
-        n_rel = n_rel_loc
+        n_rel = n_rel_loc                    # (T, R)
+        n_join = estimator.joinable_counts(store, relax, pattern_ids, active)
         for ax in axis_names:
             n = jax.lax.psum(n, ax)
             n_rel = jax.lax.psum(n_rel, ax)
+            n_join = jax.lax.psum(n_join, ax)
         e_qk, e_q1 = estimator.score_estimates_from_cards(
             global_stats, relax, pattern_ids, active, n, n_rel,
             cfg.k, cfg.grid_bins)
-        mask = (e_q1 > e_qk) & active
+        safe_ids = jnp.where(active, pattern_ids, 0)
+        rel_exists = relax.ids[safe_ids] != PAD_KEY
+        mask = plangen.plan_from_estimates(
+            e_qk, e_q1, n_join, rel_exists, active, cfg.plan_slack)
+        if mode == "specqp_pattern":
+            mask = plangen.per_pattern_plan(mask)
     elif mode == "join_only":
-        mask = jnp.zeros_like(pattern_ids, dtype=bool)
+        mask = jnp.zeros((pattern_ids.shape[0], R), dtype=bool)
     else:
         raise ValueError(mode)
 
@@ -163,7 +172,7 @@ def run_query_sharded(skg: ShardedKG, pattern_ids: jax.Array,
         local = jax.tree_util.tree_map(lambda x: x[0], stores)
         return _shard_body(local, relax, gstats, pids, cfg, mode, shard_axes)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body_wrap, mesh=mesh,
         in_specs=(store_specs,
                   jax.tree_util.tree_map(lambda _: rep, skg.relax),
@@ -195,7 +204,7 @@ def make_batched_sharded_fn(cfg: EngineConfig, mode: str,
 
     def wrapped(stores, relax, gstats, queries):
         store_specs = jax.tree_util.tree_map(lambda _: P(shard_axes), stores)
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             body, mesh=mesh,
             in_specs=(store_specs,
                       jax.tree_util.tree_map(lambda _: rep, relax),

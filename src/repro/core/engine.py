@@ -1,11 +1,13 @@
 """Query engines: TriniT (non-speculative baseline), Spec-QP, and oracles.
 
-One mask-parameterized executor serves both engines (DESIGN.md §2): the plan
-is a boolean per triple pattern saying whether its relaxations join the
-merge; TriniT is the all-True plan, Spec-QP uses PLANGEN's speculation.
-The executor is an n-ary bound-driven rank join over blockwise incremental
-merges, carried entirely through ``lax.while_loop`` so the whole query
-(planning included) jits and vmaps.
+One mask-parameterized executor serves every engine (DESIGN.md §2): the plan
+is a ``(T, R)`` boolean — one bit per (pattern, relaxation) pair — saying
+which relaxation source lists join the merge. TriniT is the all-True plan;
+Spec-QP uses PLANGEN's per-relaxation speculation; ``specqp_pattern`` is the
+paper's coarser per-pattern speculation (``mask.any(axis=1)`` broadcast),
+kept as an ablation baseline. The executor is an n-ary bound-driven rank
+join over blockwise incremental merges, carried entirely through
+``lax.while_loop`` so the whole query (planning included) jits and vmaps.
 """
 from __future__ import annotations
 
@@ -141,13 +143,22 @@ def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
 @partial(jax.jit, static_argnames=("cfg", "mode"))
 def run_query(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
               cfg: EngineConfig, mode: str = "specqp") -> EngineResult:
-    """Answer one star query. mode ∈ {"trinit", "specqp", "join_only"}."""
+    """Answer one star query.
+
+    mode ∈ {"trinit", "specqp", "specqp_pattern", "join_only"}.
+    """
+    R = relax.ids.shape[1]
     if mode == "trinit":
-        mask = plangen.trinit_plan(pattern_ids)
+        mask = plangen.trinit_plan(pattern_ids, R)
     elif mode == "specqp":
-        mask = plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins)
+        mask = plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
+                            cfg.plan_slack)
+    elif mode == "specqp_pattern":
+        mask = plangen.per_pattern_plan(
+            plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
+                         cfg.plan_slack))
     elif mode == "join_only":
-        mask = jnp.zeros_like(pattern_ids, dtype=bool)
+        mask = jnp.zeros((pattern_ids.shape[0], R), dtype=bool)
     else:
         raise ValueError(mode)
     streams = ops.gather_streams(store, relax, pattern_ids, mask)
@@ -176,15 +187,17 @@ def naive_full_scan(store: TripleStore, relax: RelaxTable,
     max weighted score over {original} ∪ relaxations (Definition 8's max over
     rewritings distributes over the star-join sum).
 
-    ``relax_mask`` (T,) optionally disables relaxations per pattern — used
-    to compute which patterns TRULY require relaxation (Table 3 ground
-    truth)."""
+    ``relax_mask`` optionally disables relaxations: (T, R) per-relaxation,
+    or (T,) per-pattern (broadcast over R) — used to compute which patterns
+    TRULY require relaxation (Table 3 ground truth)."""
     T = pattern_ids.shape[0]
     R = relax.ids.shape[1]
     active = pattern_ids != PAD_KEY
     safe_pid = jnp.where(active, pattern_ids, 0)
     if relax_mask is None:
-        relax_mask = jnp.ones((T,), bool)
+        relax_mask = jnp.ones((T, R), bool)
+    elif relax_mask.ndim == 1:
+        relax_mask = jnp.broadcast_to(relax_mask[:, None], (T, R))
 
     def best_per_key(pid, use_relax):
         rel_ids = jnp.where(use_relax, relax.ids[pid], PAD_KEY)

@@ -66,37 +66,113 @@ def relaxed_join_cardinality(store: TripleStore, pattern_ids: jax.Array,
     return jnp.where(has_relax, jnp.sum(mask.astype(jnp.float32)), 0.0)
 
 
+def joinable_counts(store: TripleStore, relax: RelaxTable,
+                    pattern_ids: jax.Array, active: jax.Array) -> jax.Array:
+    """(T, R) f32 — per relaxation, how many of its keys can join at all.
+
+    A key of relaxation r (of pattern t) is *joinable* if every other
+    active pattern u matches it on the union of u's sources (original ∪
+    all relaxations). A zero count proves relaxation r cannot contribute
+    to any answer — not even a multi-relaxed one — so the planner may mask
+    it without any loss. Local counts ``psum`` to global under hash
+    partitioning, like the exact cardinalities.
+    """
+    T = pattern_ids.shape[0]
+    R = relax.ids.shape[1]
+    safe_ids = jnp.where(pattern_ids == PAD_KEY, 0, pattern_ids)
+
+    def member_union(u_pid, probes):
+        rel_u = relax.ids[u_pid]                       # (R,)
+        srcs = jnp.concatenate([u_pid[None],
+                                jnp.where(rel_u == PAD_KEY, 0, rel_u)])
+        valid = jnp.concatenate([jnp.ones((1,), bool), rel_u != PAD_KEY])
+        m = jax.vmap(lambda s: member(store.sorted_keys[s], probes))(srcs)
+        return jnp.any(m & valid[:, None], axis=0)
+
+    def per_relaxation(t, r):
+        rid = relax.ids[safe_ids[t], r]
+        base = store.keys[jnp.where(rid == PAD_KEY, 0, rid)]
+        ok = base != PAD_KEY
+
+        def body(mask, u):
+            skip = (u == t) | ~active[u]
+            m = member_union(safe_ids[u], base)
+            return jnp.where(skip, mask, mask & m), None
+
+        mask, _ = jax.lax.scan(body, ok, jnp.arange(T))
+        return jnp.where(rid != PAD_KEY,
+                         jnp.sum(mask.astype(jnp.float32)), 0.0)
+
+    return jax.vmap(lambda t: jax.vmap(lambda r: per_relaxation(t, r))(
+        jnp.arange(R)))(jnp.arange(T))
+
+
 def exact_cardinalities(store: TripleStore, relax: RelaxTable,
                         pattern_ids: jax.Array, active: jax.Array):
-    """(n, n_rel (T,)) — original and per-top-relaxation join cardinalities.
+    """(n, n_rel (T, R)) — original and per-relaxation join cardinalities.
 
+    ``n_rel[t, r]`` is the cardinality of the query with pattern ``t``
+    replaced by its r-th relaxation (0 where the relaxation slot is padding).
     Purely local to the store it is given; under hash partitioning the
     global cardinality is the ``psum`` of per-shard values (a key's triples
     for every pattern live on one shard).
     """
     T = pattern_ids.shape[0]
+    R = relax.ids.shape[1]
     safe_ids = jnp.where(pattern_ids == PAD_KEY, 0, pattern_ids)
     n = star_join_cardinality(store, safe_ids, active)
 
-    def per_pattern(t):
+    def per_relaxation(t, r):
         pid = safe_ids[t]
-        rid = relax.ids[pid, 0]
+        rid = relax.ids[pid, r]
         return relaxed_join_cardinality(store, safe_ids, active, t, rid)
 
-    n_rel = jax.vmap(per_pattern)(jnp.arange(T))
+    n_rel = jax.vmap(lambda t: jax.vmap(lambda r: per_relaxation(t, r))(
+        jnp.arange(R)))(jnp.arange(T))
     return n, n_rel
+
+
+def leave_one_out_pmfs(pmfs: jax.Array, active: jax.Array) -> jax.Array:
+    """loo[t] = convolution of every *active* pattern pmf except pattern t.
+
+    Computed with prefix/suffix convolution scans so swapping any pattern's
+    pmf costs one extra convolution instead of T — the planner evaluates
+    T·R relaxed queries, so this turns O(T²·R) convolutions into O(T + T·R).
+
+    Args:
+      pmfs: (T, G+1) per-pattern pmfs on [0, 1].
+      active: (T,) bool.
+    Returns: (T, T*G+1) unnormalized leave-one-out pmfs on [0, T].
+    """
+    T, G1 = pmfs.shape
+    G = G1 - 1
+    out_len = T * G + 1
+    delta = jnp.zeros((out_len,), jnp.float32).at[0].set(1.0)
+
+    def step(acc, xs):
+        pmf, act = xs
+        nxt = jnp.where(act, jnp.convolve(acc, pmf)[:out_len], acc)
+        return nxt, acc      # emit acc BEFORE folding in this pattern
+
+    _, prefix = jax.lax.scan(step, delta, (pmfs, active))
+    _, suffix_rev = jax.lax.scan(step, delta, (pmfs[::-1], active[::-1]))
+    suffix = suffix_rev[::-1]
+    return jax.vmap(lambda p, s: jnp.convolve(p, s)[:out_len])(prefix, suffix)
 
 
 def score_estimates_from_cards(stats_table: jax.Array, relax: RelaxTable,
                                pattern_ids: jax.Array, active: jax.Array,
                                n: jax.Array, n_rel: jax.Array,
                                k: int, G: int):
-    """E_Q(k) and per-pattern E_Q'(1) given (possibly psum'd) cardinalities.
+    """E_Q(k) and per-relaxation E_Q'(1) given (possibly psum'd) cardinalities.
 
+    ``n_rel`` is (T, R); the returned ``e_q1`` is (T, R) with -inf where the
+    relaxation slot is padding or the pattern is inactive.
     ``stats_table`` is the *global* (P, 4) statistics array — tiny and
     replicated in the distributed engine.
     """
     T = pattern_ids.shape[0]
+    R = relax.ids.shape[1]
     safe_ids = jnp.where(pattern_ids == PAD_KEY, 0, pattern_ids)
     stats = stats_table[safe_ids]                      # (T, 4)
     pmfs = jax.vmap(lambda s: histogram.pattern_pmf(s, 1.0, G))(stats)
@@ -104,29 +180,34 @@ def score_estimates_from_cards(stats_table: jax.Array, relax: RelaxTable,
     pmf_q = histogram.convolve_pmfs(pmfs, active)
     e_qk = histogram.expected_order_statistic(pmf_q, n, jnp.float32(k), G)
 
-    def per_pattern(t):
+    loo = leave_one_out_pmfs(pmfs, active)             # (T, T*G+1)
+    out_len = loo.shape[1]
+
+    def per_relaxation(t, r):
         pid = safe_ids[t]
-        rid = relax.ids[pid, 0]
-        w = relax.weights[pid, 0]
+        rid = relax.ids[pid, r]
+        w = relax.weights[pid, r]
         safe_rid = jnp.where(rid == PAD_KEY, 0, rid)
         relaxed_pmf = histogram.pattern_pmf(stats_table[safe_rid], w, G)
-        pmfs_mod = pmfs.at[t].set(relaxed_pmf)
-        pmf_qr = histogram.convolve_pmfs(pmfs_mod, active)
+        pmf_qr = jnp.convolve(loo[t], relaxed_pmf)[:out_len]
+        pmf_qr = pmf_qr / jnp.maximum(jnp.sum(pmf_qr), 1e-30)
         e1 = histogram.expected_order_statistic(
-            pmf_qr, n_rel[t], jnp.float32(1.0), G)
+            pmf_qr, n_rel[t, r], jnp.float32(1.0), G)
         usable = (rid != PAD_KEY) & active[t]
         return jnp.where(usable, e1, -jnp.inf)
 
-    e_q1 = jax.vmap(per_pattern)(jnp.arange(T))
+    e_q1 = jax.vmap(lambda t: jax.vmap(lambda r: per_relaxation(t, r))(
+        jnp.arange(R)))(jnp.arange(T))
     return e_qk, e_q1
 
 
 def query_score_estimates(store: TripleStore, relax: RelaxTable,
                           pattern_ids: jax.Array, active: jax.Array,
                           k: int, G: int):
-    """E_Q(k) for the original query and E_Q'(1) per top-relaxed pattern.
+    """E_Q(k) for the original query and E_Q'(1) for every relaxed query.
 
-    Returns (e_qk: (), e_q1_relaxed: (T,)) — the quantities PLANGEN compares.
+    Returns (e_qk: (), e_q1: (T, R)) — the quantities PLANGEN compares,
+    one estimate per (pattern, relaxation) pair.
     """
     n, n_rel = exact_cardinalities(store, relax, pattern_ids, active)
     return score_estimates_from_cards(

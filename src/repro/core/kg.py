@@ -92,7 +92,8 @@ def build_relax_table(P: int,
                       max_relax: int | None = None) -> RelaxTable:
     """Build a RelaxTable from {pattern: [(relaxed_pattern, weight), ...]}.
 
-    Relaxations are sorted by weight descending (PLANGEN inspects index 0).
+    Relaxations are sorted by weight descending; PLANGEN evaluates every
+    slot (its plan is per-relaxation), so the order only affects layout.
     """
     if max_relax is None:
         max_relax = max((len(v) for v in rules.values()), default=1)

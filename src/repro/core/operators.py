@@ -91,7 +91,12 @@ class MergedStreams(NamedTuple):
 
 def gather_streams(store, relax, pattern_ids: jax.Array,
                    relax_mask: jax.Array) -> MergedStreams:
-    """Materialize stream views for a query given the plan's relax mask."""
+    """Materialize stream views for a query given the plan's relax mask.
+
+    ``relax_mask`` is the planner's (T, R) per-relaxation mask: source r+1
+    of stream t is live iff relaxation slot r of pattern t is real (not
+    padding) *and* the plan enabled it.
+    """
     T = pattern_ids.shape[0]
     R = relax.ids.shape[1]
     safe_pid = jnp.where(pattern_ids == PAD_KEY, 0, pattern_ids)
@@ -103,7 +108,7 @@ def gather_streams(store, relax, pattern_ids: jax.Array,
         rel_ids == PAD_KEY, 0, rel_ids)], axis=1)      # (T, R+1)
     src_valid = jnp.concatenate([
         (pattern_ids != PAD_KEY)[:, None],
-        (rel_ids != PAD_KEY) & relax_mask[:, None],
+        (rel_ids != PAD_KEY) & relax_mask,
     ], axis=1)                                         # (T, R+1)
     weights = jnp.concatenate(
         [jnp.ones((T, 1), jnp.float32), rel_w], axis=1)

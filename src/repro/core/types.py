@@ -63,8 +63,9 @@ class TripleStore:
 class RelaxTable:
     """Weighted relaxation rules r = (q, q', w), grouped by domain pattern.
 
-    Relaxations are sorted by weight desc; the paper only ever *plans* with
-    the top-weighted one (§3.2.1) but *executes* all of them.
+    Relaxations are sorted by weight desc. The paper only ever *plans* with
+    the top-weighted one (§3.2.1); our planner generalizes this and emits a
+    per-relaxation (T, R) decision, so every slot is estimated.
     """
 
     ids: jax.Array       # (P, R) int32 pattern ids, PAD_KEY padded
@@ -80,8 +81,9 @@ class EngineResult:
     n_pulled: jax.Array    # () int32 — items materialized from input lists
     n_answers: jax.Array   # () int32 — (partial) answer objects created
     n_iters: jax.Array     # () int32 — while-loop trips
-    relax_mask: jax.Array  # (T,) bool — which patterns were processed with
-                           # their relaxations (the plan; all-True for TriniT)
+    relax_mask: jax.Array  # (T, R) bool — which relaxation sources joined
+                           # the merge (the plan; all-True for TriniT). The
+                           # per-pattern view is relax_mask.any(axis=1).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +93,10 @@ class EngineConfig:
     block: int = 64           # items pulled per merge step
     k: int = 10               # top-k
     grid_bins: int = 512      # histogram grid resolution per unit score
+    # Sibling-pruning aggressiveness of the (T, R) planner: None keeps every
+    # joinable relaxation of a speculated pattern; a float s adds the
+    # E_Q'(1) margin test (0 = most aggressive). See plangen.plan.
+    plan_slack: float | None = None
     use_pallas: bool = False  # dispatch joins/merges to Pallas kernels
     # Interpret mode for Pallas on CPU; ignored on TPU.
     pallas_interpret: bool = True

@@ -55,7 +55,9 @@ def _place_list(rng: np.random.Generator, core: np.ndarray, cover: float,
     ``front`` — how close to the top of the score order the core keys sit
     (0 = at the very top, 1 = uniformly spread).
     """
-    n_core = max(2, int(cover * len(core)))
+    n_core = int(cover * len(core))
+    if cover > 0:
+        n_core = max(2, n_core)
     own_core = rng.choice(core, size=n_core, replace=False)
     extra = rng.choice(n_entities, size=n_extra, replace=False)
     extra = np.setdiff1d(extra, own_core)
@@ -124,7 +126,15 @@ def make_workload(name: str = "xkg_mini", *, seed: int = 0,
             for j in range(n_relax):
                 w = float(np.clip(w0 * (0.9 ** j) * rng.uniform(0.85, 1.0),
                                   0.02, 0.95))
-                rel_cover = float(rng.uniform(0.3, 1.0))
+                # Real relaxation spaces are full of off-target rewritings
+                # (entity/feature substitutions whose answers miss the
+                # join); ~30% of relaxations are such strays. Per-pattern
+                # plans drag them into the merge; per-relaxation plans can
+                # mask them individually.
+                if rng.random() < 0.3:
+                    rel_cover = 0.0
+                else:
+                    rel_cover = float(rng.uniform(0.3, 1.0))
                 rel_front = float(rng.uniform(0.05, 0.8))
                 n_rel = int(rng.uniform(0.3, 1.0) * list_len)
                 rkeys = _place_list(rng, core, rel_cover, rel_front, n_rel,

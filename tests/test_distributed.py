@@ -13,19 +13,19 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
+from repro import compat
 from repro.data import kg_synth
 from repro.core import engine, distributed
 from repro.core.types import EngineConfig
 
-wl = kg_synth.tiny_workload(seed=3, n_queries=5)
+wl = kg_synth.tiny_workload(seed=3, n_queries=3)
 P = wl.store.keys.shape[0]
 lists = []
 for p in range(P):
     n = int(wl.store.lengths[p])
     lists.append((np.asarray(wl.store.keys[p][:n]),
                   np.asarray(wl.store.scores[p][:n])))
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 skg = distributed.build_sharded_kg(lists, wl.relax, 8)
 cfg = EngineConfig(block=8, k=5, grid_bins=128)
 for i in range(len(wl.queries)):
@@ -41,9 +41,9 @@ for i in range(len(wl.queries)):
 
 # batched sharded entrypoint
 fn = distributed.make_batched_sharded_fn(cfg, "specqp", mesh)
-qs = jnp.asarray(wl.queries[:4])
+qs = jnp.asarray(wl.queries[:2])
 batch = fn(skg.stores, skg.relax, skg.global_stats, qs)
-for i in range(4):
+for i in range(2):
     s1 = engine.run_query(wl.store, wl.relax, qs[i], cfg, "specqp")
     assert np.allclose(np.asarray(batch.scores[i]), np.asarray(s1.scores),
                        rtol=1e-5), i
@@ -57,6 +57,6 @@ def test_distributed_engine_equivalence():
     env["PYTHONPATH"] = "src"
     env.pop("JAX_PLATFORMS", None)
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900,
+                         capture_output=True, text=True, timeout=1800,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr

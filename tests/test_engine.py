@@ -30,6 +30,7 @@ def test_trinit_is_exact_topk(workload):
 def test_specqp_quality_and_savings(workload):
     """Paper claims: decent precision, fewer pulls, some queries pruned."""
     wl = workload
+    rel_ids = np.asarray(wl.relax.ids)
     precs, pruned, ratio = [], 0, []
     for i in range(len(wl.queries)):
         q = jnp.asarray(wl.queries[i])
@@ -39,7 +40,11 @@ def test_specqp_quality_and_savings(workload):
         sk = {int(k) for k in np.asarray(rs.keys) if k >= 0}
         precs.append(len(tk & sk) / max(len(tk), 1))
         T = int((np.asarray(q) >= 0).sum())
-        pruned += int(np.asarray(rs.relax_mask).sum() < T)
+        # Pruned = the (T, R) plan masked off at least one real relaxation.
+        avail = int((rel_ids[wl.queries[i][:T]] >= 0).sum())
+        mask = np.asarray(rs.relax_mask)
+        assert mask.shape == rel_ids[wl.queries[i]].shape
+        pruned += int(mask[:T].sum() < avail)
         ratio.append(float(rs.n_pulled) / max(float(rt.n_pulled), 1))
         # Spec-QP never pulls MORE than TriniT (it processes a subset).
         assert int(rs.n_pulled) <= int(rt.n_pulled) + CFG.block
@@ -80,7 +85,11 @@ def test_plan_is_boolean_mask_over_active(workload):
     mask = plangen.plan(wl.store, wl.relax, q, CFG.k, CFG.grid_bins)
     active = np.asarray(q) >= 0
     assert mask.dtype == jnp.bool_
+    assert mask.shape == (q.shape[0], wl.relax.ids.shape[1])
+    # Padded query rows and padded relaxation slots are never planned.
     assert not np.any(np.asarray(mask)[~active])
+    rel_exists = np.asarray(wl.relax.ids)[np.where(active, np.asarray(q), 0)] >= 0
+    assert not np.any(np.asarray(mask) & ~rel_exists)
 
 
 def test_batched_equals_single(workload):

