@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.data import kg_synth
-from repro.core import engine
+from repro.core import engine, plangen
 from repro.core.types import EngineConfig
 
 KS = (10, 15, 20)
@@ -197,16 +197,73 @@ def fig6to9_efficiency(results_by_ds):
     return "\n".join(out)
 
 
+def planner_cost(fast: bool = False):
+    """Planner-cost scaling: plan time vs execute time, exact vs sketch.
+
+    The exact planner's binary-search cardinalities cost O(T·R·L·log L)
+    per query; the sketched planner is O(T·R·W), independent of L. This
+    table makes the scaling visible (and reports the (T, R) mask agreement
+    between the two at each L — the sketch's planning-quality check).
+    """
+    Ls = (64, 128, 256) if fast else (128, 256, 512, 1024)
+    k, G = 10, 256
+    cfg = EngineConfig(block=32, k=k, grid_bins=G)
+    rows = []
+    for L in Ls:
+        wl = kg_synth.make_workload("xkg_mini", list_len=L, seed=0,
+                                    n_queries=8)
+        qs = [jnp.asarray(q) for q in wl.queries]
+        plan_t, masks = {}, {}
+        for cm in ("exact", "sketch"):
+            fn = jax.jit(lambda s, r, q, cm=cm: plangen.plan(
+                s, r, q, k, G, None, cm))
+            jax.block_until_ready(fn(wl.store, wl.relax, qs[0]))  # compile
+            outs, t0 = [], time.perf_counter()
+            for q in qs:
+                outs.append(fn(wl.store, wl.relax, q))
+            jax.block_until_ready(outs)
+            plan_t[cm] = (time.perf_counter() - t0) / len(qs)
+            masks[cm] = [np.asarray(m) for m in outs]
+        agree = float(np.mean([
+            (a == b).mean() for a, b in zip(masks["exact"], masks["sketch"])]))
+        jax.block_until_ready(
+            engine.run_query(wl.store, wl.relax, qs[0], cfg, "trinit").scores)
+        t0 = time.perf_counter()
+        for q in qs:
+            jax.block_until_ready(
+                engine.run_query(wl.store, wl.relax, q, cfg, "trinit").scores)
+        exec_t = (time.perf_counter() - t0) / len(qs)
+        rows.append(dict(L=L, plan_exact=plan_t["exact"],
+                         plan_sketch=plan_t["sketch"], exec=exec_t,
+                         agree=agree))
+
+    out = ["\n### Planner cost — plan vs execute time as L grows "
+           "(cardinality_mode exact vs sketch)",
+           "| L | plan exact (ms) | plan sketch (ms) | exec (ms) | "
+           "plan/exec exact | plan/exec sketch | mask agree |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['L']} | {r['plan_exact']*1e3:.2f} "
+            f"| {r['plan_sketch']*1e3:.2f} | {r['exec']*1e3:.2f} "
+            f"| {r['plan_exact']/max(r['exec'],1e-9):.2f} "
+            f"| {r['plan_sketch']/max(r['exec'],1e-9):.2f} "
+            f"| {r['agree']:.3f} |")
+    return "\n".join(out), rows
+
+
 def run_all(fast: bool = False):
     kw = dict(list_len=256, n_queries=16) if fast else dict(list_len=512)
     results = {}
     for ds in ("xkg_mini", "twitter_mini"):
         _, res = run_dataset(ds, **kw)
         results[ds] = res
+    plan_report, plan_rows = planner_cost(fast)
     report = "\n".join([
         table2_precision(results),
         table3_prediction_accuracy(results),
         table4_score_error(results),
         fig6to9_efficiency(results),
+        plan_report,
     ])
-    return report, results
+    return report, results, plan_rows

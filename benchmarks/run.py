@@ -24,7 +24,7 @@ def main() -> None:
     from benchmarks import paper_tables
 
     t0 = time.time()
-    report, results = paper_tables.run_all(fast=args.fast)
+    report, results, plan_rows = paper_tables.run_all(fast=args.fast)
     dt = time.time() - t0
 
     # CSV contract: name,us_per_call,derived
@@ -55,10 +55,22 @@ def main() -> None:
             print(f"table3_prediction_{ds}_k{k},{t_sp:.0f},{exact:.3f}")
             err = np.mean([r["err_mean"] for r in rows])
             print(f"table4_score_err_{ds}_k{k},{t_sp:.0f},{err:.4f}")
+    for r in plan_rows:
+        # derived = plan-time share of execute-time (flat in L for sketch).
+        print(f"plan_cost_exact_L{r['L']},{r['plan_exact']*1e6:.0f},"
+              f"{r['plan_exact']/max(r['exec'],1e-9):.3f}")
+        print(f"plan_cost_sketch_L{r['L']},{r['plan_sketch']*1e6:.0f},"
+              f"{r['plan_sketch']/max(r['exec'],1e-9):.3f}")
+        print(f"plan_mask_agreement_L{r['L']},{r['plan_sketch']*1e6:.0f},"
+              f"{r['agree']:.3f}")
 
     print(report)
     os.makedirs("results", exist_ok=True)
-    with open("results/paper_report.md", "w") as f:
+    # Append (never clobber) so the perf history survives across runs.
+    stamp = time.strftime("%Y-%m-%d %H:%M:%S")
+    profile = "fast" if args.fast else "full"
+    with open("results/paper_report.md", "a") as f:
+        f.write(f"\n\n## Benchmark run {stamp} ({profile} profile)\n")
         f.write(report + f"\n\n(total bench time {dt:.0f}s)\n")
 
     # Roofline summary if dry-run results exist.

@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding
 from repro.configs import base
 from repro.core import distributed as dist
+from repro.core import sketches
 from repro.core.types import TripleStore, RelaxTable, EngineConfig
 
 ARCH = "kg-specqp"
@@ -54,6 +55,8 @@ def store_specs(n_shards: int):
         lengths=base.spec((n_shards, Pn), i32),
         sorted_keys=base.spec((n_shards, Pn, L), i32),
         stats=base.spec((n_shards, Pn, 4), f32),
+        sketch=base.spec((n_shards, Pn, sketches.SKETCH_LANES,
+                          sketches.SKETCH_WORDS), jnp.uint32),
     )
     relax = RelaxTable(ids=base.spec((Pn, N_RELAX), i32),
                        weights=base.spec((Pn, N_RELAX), f32))
@@ -76,7 +79,8 @@ def make_cell(shape: str) -> base.CellSpec:
     store_axes = TripleStore(
         keys=("all_devices", None, None), scores=("all_devices", None, None),
         lengths=("all_devices", None), sorted_keys=("all_devices", None, None),
-        stats=("all_devices", None, None))
+        stats=("all_devices", None, None),
+        sketch=("all_devices", None, None, None))
     relax_axes = RelaxTable(ids=(None, None), weights=(None, None))
     return base.CellSpec(ARCH, shape, "serve", fn,
                          (stores, relax, gstats, queries),

@@ -59,6 +59,7 @@ def shard_workload(pattern_lists, n_shards: int,
     P_n = len(pattern_lists)
     norm_lists = []
     g_stats = np.zeros((P_n, 4), np.float32)
+    shard_ids = []
     for p, (k, s) in enumerate(pattern_lists):
         k = np.asarray(k, np.int64)
         s = np.asarray(s, np.float64)
@@ -68,17 +69,25 @@ def shard_workload(pattern_lists, n_shards: int,
         g_stats[p] = kglib.compute_pattern_stats(
             sn[order].astype(np.float32), len(k))
         norm_lists.append((k, sn))
+        shard_ids.append(mix_hash(k, n_shards) if len(k) else
+                         np.zeros((0,), np.int64))
 
     if list_len is None:
-        max_len = max((len(k) for k, _ in pattern_lists), default=1)
-        # Hash imbalance margin: 2x mean + 16.
-        list_len = int(2 * max(1, max_len // max(n_shards, 1))) + 16
+        # True per-shard maximum, not a mean-based heuristic: under hash
+        # imbalance a hot shard can exceed 2x-mean-style margins and trip
+        # build_store's length assert.
+        list_len = 1
+        for sid in shard_ids:
+            if len(sid):
+                list_len = max(list_len,
+                               int(np.bincount(sid,
+                                               minlength=n_shards).max()))
 
     shard_stores = []
     for s_id in range(n_shards):
         per_pattern = []
-        for (k, sn) in norm_lists:
-            sel = mix_hash(k, n_shards) == s_id
+        for (k, sn), sid in zip(norm_lists, shard_ids):
+            sel = sid == s_id
             per_pattern.append((k[sel].astype(np.int32), sn[sel]))
         st = kglib.build_store(per_pattern, list_len=list_len,
                                normalize=False)
@@ -105,15 +114,25 @@ def _shard_body(store: TripleStore, relax: RelaxTable,
     if mode == "trinit":
         mask = plangen.trinit_plan(pattern_ids, R)
     elif mode in ("specqp", "specqp_pattern"):
-        n_loc, n_rel_loc = estimator.exact_cardinalities(
-            store, relax, pattern_ids, active)
+        # Local cardinalities psum to global totals under hash partitioning
+        # for both flavors: key sets partition across shards, so exact
+        # counts are additive, and the sketch estimates (built from
+        # shard-local signatures at ingest) are additive in expectation.
+        n_loc, n_rel_loc = estimator.cardinalities(
+            store, relax, pattern_ids, active, cfg.cardinality_mode)
         n = n_loc
         n_rel = n_rel_loc                    # (T, R)
-        n_join = estimator.joinable_counts(store, relax, pattern_ids, active)
+        n_join = estimator.joinability(store, relax, pattern_ids, active,
+                                       cfg.cardinality_mode)
         for ax in axis_names:
             n = jax.lax.psum(n, ax)
             n_rel = jax.lax.psum(n_rel, ax)
             n_join = jax.lax.psum(n_join, ax)
+        if cfg.cardinality_mode == "sketch":
+            # Round the GLOBAL estimate: joinable mass spread thinly
+            # across shards must be summed before the sub-key cut.
+            from repro.core import sketches
+            n_join = sketches.round_joinability(n_join)
         e_qk, e_q1 = estimator.score_estimates_from_cards(
             global_stats, relax, pattern_ids, active, n, n_rel,
             cfg.k, cfg.grid_bins)

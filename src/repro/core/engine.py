@@ -43,6 +43,12 @@ def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
     N = R1 * L + 2 * B
     if cfg.seen_cap:
         N = min(N, max(cfg.seen_cap, 2 * B))
+    # The seen buffer is a ring of whole B-item blocks: N must be a multiple
+    # of B so wrapped appends overwrite exactly one stale block. A ragged N
+    # would split appends across two old blocks, leaving half-overwritten
+    # stale fragments probe-able forever (duplicate keys double-count in the
+    # lookup contraction).
+    N = -(-N // B) * B
     k = cfg.k
 
     stream_max = jnp.max(
@@ -92,9 +98,10 @@ def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
             st.top_keys, st.top_scores, cand_keys, cand_scores, k)
 
         # Append the block to t*'s seen buffer (fixed B slots per pull;
-        # wraps as a ring when a seen_cap is configured).
+        # wraps as a ring when a seen_cap is configured). N is a multiple
+        # of B, so start is always block-aligned and start + B <= N.
         def append(t):
-            start = st.seen_cnt[t] % jnp.int32(max(N - B, B))
+            start = st.seen_cnt[t] % jnp.int32(N)
             upd_k = jax.lax.dynamic_update_slice(
                 st.seen_keys[t], blk_k, (start,))
             upd_s = jax.lax.dynamic_update_slice(
@@ -122,6 +129,11 @@ def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
             cursors=cursors, seen_keys=seen_keys, seen_scores=seen_scores,
             seen_cnt=seen_cnt, top_keys=top_keys, top_scores=top_scores,
             n_pulled=st.n_pulled + n_taken.astype(jnp.int32),
+            # Counts answer-object *materializations*: under a seen_cap, a
+            # key evicted and re-pulled from a later source joins again and
+            # is counted again — deliberate, the counter is a work/memory
+            # proxy and the re-join is real extra work the cap caused (the
+            # top-k buffer itself dedups, so results stay correct).
             n_answers=st.n_answers + jnp.sum(cand_ok).astype(jnp.int32),
             n_iters=st.n_iters + 1, done=done)
 
@@ -152,11 +164,11 @@ def run_query(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
         mask = plangen.trinit_plan(pattern_ids, R)
     elif mode == "specqp":
         mask = plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
-                            cfg.plan_slack)
+                            cfg.plan_slack, cfg.cardinality_mode)
     elif mode == "specqp_pattern":
         mask = plangen.per_pattern_plan(
             plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
-                         cfg.plan_slack))
+                         cfg.plan_slack, cfg.cardinality_mode))
     elif mode == "join_only":
         mask = jnp.zeros((pattern_ids.shape[0], R), dtype=bool)
     else:

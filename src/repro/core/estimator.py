@@ -1,9 +1,15 @@
 """Expected-score estimator (§3.1): join cardinalities + order statistics.
 
-Cardinalities use *exact* join selectivities like the paper (footnote 3):
-for star joins on a shared variable the join cardinality is the size of the
-intersection of the per-pattern key sets, which we compute with vectorized
-binary searches over the key-sorted copies kept in the store.
+Cardinalities come in two interchangeable flavors behind the
+``cardinality_mode`` knob (``cardinalities`` / ``joinability`` dispatch):
+
+* ``"exact"`` — exact join selectivities like the paper (footnote 3): for
+  star joins on a shared variable the join cardinality is the size of the
+  intersection of the per-pattern key sets, computed with vectorized
+  binary searches over the key-sorted copies kept in the store
+  (O(L log L) per probe).
+* ``"sketch"`` — bitmap-signature estimates (sketches.py, DESIGN.md §6):
+  O(W) bitwise popcounts per probe, planning cost independent of L.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.types import TripleStore, RelaxTable, PAD_KEY, KEY_SENTINEL
 from repro.core import histogram
+from repro.core import sketches
 
 
 def member(sorted_keys: jax.Array, probes: jax.Array) -> jax.Array:
@@ -132,6 +139,40 @@ def exact_cardinalities(store: TripleStore, relax: RelaxTable,
     return n, n_rel
 
 
+def cardinalities(store: TripleStore, relax: RelaxTable,
+                  pattern_ids: jax.Array, active: jax.Array,
+                  mode: str = "exact"):
+    """(n, n_rel) join cardinalities under ``mode`` ∈ {"exact", "sketch"}.
+
+    Both flavors are local to the store they are given and ``psum`` to
+    global values under hash partitioning.
+    """
+    if mode == "exact":
+        return exact_cardinalities(store, relax, pattern_ids, active)
+    if mode == "sketch":
+        return sketches.sketch_cardinalities(store, relax, pattern_ids,
+                                             active)
+    raise ValueError(f"unknown cardinality_mode: {mode!r}")
+
+
+def joinability(store: TripleStore, relax: RelaxTable,
+                pattern_ids: jax.Array, active: jax.Array,
+                mode: str = "exact") -> jax.Array:
+    """(T, R) joinable-key counts under ``mode`` ∈ {"exact", "sketch"}.
+
+    The sketch flavor's zeros are sound (an empty AND lane proves
+    emptiness) but its positives are estimates; the planner additionally
+    rounds sub-half-key global estimates to 0 (``sketches.
+    round_joinability``), a bounded approximation of the exact prune.
+    """
+    if mode == "exact":
+        return joinable_counts(store, relax, pattern_ids, active)
+    if mode == "sketch":
+        return sketches.sketch_joinable_counts(store, relax, pattern_ids,
+                                               active)
+    raise ValueError(f"unknown cardinality_mode: {mode!r}")
+
+
 def leave_one_out_pmfs(pmfs: jax.Array, active: jax.Array) -> jax.Array:
     """loo[t] = convolution of every *active* pattern pmf except pattern t.
 
@@ -203,12 +244,13 @@ def score_estimates_from_cards(stats_table: jax.Array, relax: RelaxTable,
 
 def query_score_estimates(store: TripleStore, relax: RelaxTable,
                           pattern_ids: jax.Array, active: jax.Array,
-                          k: int, G: int):
+                          k: int, G: int, cardinality_mode: str = "exact"):
     """E_Q(k) for the original query and E_Q'(1) for every relaxed query.
 
     Returns (e_qk: (), e_q1: (T, R)) — the quantities PLANGEN compares,
     one estimate per (pattern, relaxation) pair.
     """
-    n, n_rel = exact_cardinalities(store, relax, pattern_ids, active)
+    n, n_rel = cardinalities(store, relax, pattern_ids, active,
+                             cardinality_mode)
     return score_estimates_from_cards(
         store.stats, relax, pattern_ids, active, n, n_rel, k, G)

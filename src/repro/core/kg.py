@@ -9,6 +9,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.types import TripleStore, RelaxTable, PAD_KEY, KEY_SENTINEL
+from repro.core import sketches as sketchlib
 
 
 def compute_pattern_stats(scores: np.ndarray, length: int) -> np.ndarray:
@@ -38,13 +39,22 @@ def compute_pattern_stats(scores: np.ndarray, length: int) -> np.ndarray:
 
 def build_store(pattern_lists: list[tuple[np.ndarray, np.ndarray]],
                 list_len: int | None = None,
-                normalize: bool = True) -> TripleStore:
+                normalize: bool = True,
+                sketch_lanes: int = sketchlib.SKETCH_LANES,
+                sketch_words: int = sketchlib.SKETCH_WORDS) -> TripleStore:
     """Build a TripleStore from per-pattern (keys, raw_scores) host arrays.
 
     Scores are normalized per Definition 5 (divide by the list max) unless
     ``normalize=False`` (used by the sharded build, where normalization by
     the *global* max already happened). Lists are sorted by score desc and
-    padded to a common length.
+    padded to a common length. Bitmap key signatures for the sketched
+    planner (``sketch_lanes`` × ``sketch_words`` words, DESIGN.md §6) are
+    computed here, once per ingest — the sharded build therefore gets
+    shard-local signatures whose estimates psum to global totals. They
+    are built unconditionally (also for exact-mode users): the one-time
+    host cost is small next to the sort/stats pass, and a store carrying
+    signatures can serve either ``cardinality_mode`` per query without
+    re-ingest.
     """
     P = len(pattern_lists)
     if list_len is None:
@@ -78,12 +88,15 @@ def build_store(pattern_lists: list[tuple[np.ndarray, np.ndarray]],
         else:
             stats[p] = compute_pattern_stats(scores[p], 0)
 
+    sketch = sketchlib.build_sketches([k for k, _ in pattern_lists],
+                                      lanes=sketch_lanes, words=sketch_words)
     return TripleStore(
         keys=jnp.asarray(keys),
         scores=jnp.asarray(scores),
         lengths=jnp.asarray(lengths),
         sorted_keys=jnp.asarray(sorted_keys),
         stats=jnp.asarray(stats),
+        sketch=jnp.asarray(sketch),
     )
 
 

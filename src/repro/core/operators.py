@@ -65,6 +65,11 @@ def lookup_scores(seen_keys: jax.Array, seen_scores: jax.Array,
 
 def _lookup_dense(seen_keys, seen_scores, probe_keys, seen_cnt, base):
     n = seen_keys.shape[0]
+    # Live window: slots written at least once. seen_cnt counts appended
+    # items cumulatively; once the ring wraps (seen_cnt >= N) every slot
+    # holds current data — ring alignment (N a multiple of the block) in
+    # the engine guarantees wrapped appends replace whole stale blocks, so
+    # "written" == "live" and no half-overwritten fragment survives.
     live = (base + jnp.arange(n)) < seen_cnt
     valid_seen = (seen_keys != PAD_KEY) & live
     eq = (probe_keys[:, None] == seen_keys[None, :]) & valid_seen[None, :]
@@ -184,11 +189,16 @@ def merged_head_score(keys, scores, lengths, cursors):
 
 
 def topk_insert(buf_keys, buf_scores, cand_keys, cand_scores, k: int):
-    """Merge candidates (unique keys) into a running top-k buffer."""
-    keys = jnp.concatenate([buf_keys, cand_keys])
-    scores = jnp.concatenate([buf_scores, cand_scores])
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return keys[top_i], top_s
+    """Merge candidates into a running top-k buffer, dedup-safe.
+
+    Candidates are unique within a block, but a key evicted from a capped
+    seen ring can be re-pulled from a later (lower-scored) source and
+    re-emitted — without dedup the same answer key would occupy two top-k
+    slots. Keep each key's max score (the buffer copy, inserted from the
+    earlier/higher pull, wins ties via the stable sort in topk_unique).
+    """
+    return topk_unique(jnp.concatenate([buf_keys, cand_keys]),
+                       jnp.concatenate([buf_scores, cand_scores]), k)
 
 
 def topk_unique(keys: jax.Array, scores: jax.Array, k: int):

@@ -63,7 +63,8 @@ def plan_from_estimates(e_qk: jax.Array, e_q1: jax.Array,
 
 def plan(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
          k: int, G: int = 512,
-         sibling_slack: float | None = None) -> jax.Array:
+         sibling_slack: float | None = None,
+         cardinality_mode: str = "exact") -> jax.Array:
     """Generate the speculative plan for one star query.
 
     Args:
@@ -71,6 +72,8 @@ def plan(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
       k: top-k target (static).
       G: histogram grid bins per unit score (static).
       sibling_slack: see ``plan_from_estimates``.
+      cardinality_mode: "exact" (binary-search selectivities, cost grows
+        with L) or "sketch" (bitmap-signature estimates, L-independent).
 
     Returns:
       (T, R) bool — True where relaxation r of pattern t must be processed.
@@ -78,8 +81,12 @@ def plan(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
     """
     active = pattern_ids != PAD_KEY
     e_qk, e_q1 = estimator.query_score_estimates(
-        store, relax, pattern_ids, active, k, G)
-    n_joinable = estimator.joinable_counts(store, relax, pattern_ids, active)
+        store, relax, pattern_ids, active, k, G, cardinality_mode)
+    n_joinable = estimator.joinability(store, relax, pattern_ids, active,
+                                       cardinality_mode)
+    if cardinality_mode == "sketch":
+        from repro.core import sketches
+        n_joinable = sketches.round_joinability(n_joinable)
     safe_ids = jnp.where(active, pattern_ids, 0)
     rel_exists = relax.ids[safe_ids] != PAD_KEY
     return plan_from_estimates(e_qk, e_q1, n_joinable, rel_exists, active,

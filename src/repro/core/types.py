@@ -50,6 +50,8 @@ class TripleStore:
     KEY_SENTINEL) for O(log L) membership probes.
     ``stats`` holds the paper's four per-pattern statistics
     ``(m, sigma_r, S_r, S_m)`` (§3.1.1).
+    ``sketch`` holds fixed-width bitmap key signatures (DESIGN.md §6) for
+    the sketched cardinality planner; its width is independent of L.
     """
 
     keys: jax.Array          # (P, L) int32, PAD_KEY padded
@@ -57,6 +59,7 @@ class TripleStore:
     lengths: jax.Array       # (P,)  int32
     sorted_keys: jax.Array   # (P, L) int32 ascending, KEY_SENTINEL padded
     stats: jax.Array         # (P, 4) f32: m, sigma_r, S_r, S_m
+    sketch: jax.Array        # (P, LANES, W) uint32 bitmap signatures
 
 
 @_pytree
@@ -97,10 +100,17 @@ class EngineConfig:
     # joinable relaxation of a speculated pattern; a float s adds the
     # E_Q'(1) margin test (0 = most aggressive). See plangen.plan.
     plan_slack: float | None = None
+    # How the planner prices joins: "exact" binary-searches full posting
+    # lists (O(L log L) per probe, the paper's footnote-3 oracle); "sketch"
+    # uses the bitmap signatures (O(W) per probe, L-independent — see
+    # sketches.py / DESIGN.md §6).
+    cardinality_mode: str = "exact"
     use_pallas: bool = False  # dispatch joins/merges to Pallas kernels
     # Interpret mode for Pallas on CPU; ignored on TPU.
     pallas_interpret: bool = True
     # Cap on the per-stream seen buffer (None = worst-case R1·L sizing).
+    # The executor rounds the cap up to a whole number of blocks so the
+    # ring wraps block-aligned (see engine._execute).
     # Rank joins terminate long before worst case in practice; the cap
     # bounds the probe bytes per iteration (§Perf on the kg-specqp cell).
     # Overflowing the cap wraps the ring (answers pulled that deep may be

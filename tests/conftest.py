@@ -2,10 +2,43 @@ import os
 import random
 import sys
 import types
+from functools import lru_cache
+
+import pytest
 
 # Smoke tests and benches see the single real device; only the dry-run
 # forces 512 placeholder devices (and does so in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# ---------------------------------------------------------------------------
+# Shared workload factory: ONE place that fixes the small test geometry.
+# Shrinking G (histogram bins), L (list length) and the entity count here —
+# and funneling every test through the same shapes so jit specializations
+# are shared across modules — is what keeps the ~110-test fast profile
+# inside the CI wall-clock budget (see .github/workflows/ci.yml).
+# ---------------------------------------------------------------------------
+TEST_GRID_BINS = 96      # planner histogram bins (G) for test configs
+TEST_LIST_LEN = 48       # posting-list length (L) for synthetic stores
+TEST_N_ENTITIES = 384
+
+
+@lru_cache(maxsize=None)
+def _cached_workload(seed, n_queries, n_entities, list_len, n_relax):
+    from repro.data import kg_synth
+    return kg_synth.tiny_workload(seed=seed, n_queries=n_queries,
+                                  n_entities=n_entities, list_len=list_len,
+                                  n_relax=n_relax)
+
+
+def small_workload(seed=0, n_queries=8, n_entities=TEST_N_ENTITIES,
+                   list_len=TEST_LIST_LEN, n_relax=3):
+    """Cached small synthetic workload (shared across test modules)."""
+    return _cached_workload(seed, n_queries, n_entities, list_len, n_relax)
+
+
+@pytest.fixture(scope="session")
+def wl_factory():
+    return small_workload
 
 # ---------------------------------------------------------------------------
 # Optional-dependency shim: `hypothesis` is not part of the baked image.

@@ -18,7 +18,7 @@ from repro.data import kg_synth
 from repro.core import engine, distributed
 from repro.core.types import EngineConfig
 
-wl = kg_synth.tiny_workload(seed=3, n_queries=3)
+wl = kg_synth.tiny_workload(seed=3, n_queries=3, n_entities=384, list_len=48)
 P = wl.store.keys.shape[0]
 lists = []
 for p in range(P):
@@ -47,8 +47,41 @@ for i in range(2):
     s1 = engine.run_query(wl.store, wl.relax, qs[i], cfg, "specqp")
     assert np.allclose(np.asarray(batch.scores[i]), np.asarray(s1.scores),
                        rtol=1e-5), i
+
+# sketched cardinalities: local estimates psum into one global plan; the
+# run must produce a well-formed unique top-k (estimates are approximate,
+# so no bit-exact mask equality with the single-device plan is asserted).
+cfg_sk = EngineConfig(block=8, k=5, grid_bins=128, cardinality_mode="sketch")
+q = jnp.asarray(wl.queries[0])
+rsk = distributed.run_query_sharded(skg, q, cfg_sk, "specqp", mesh)
+got = [int(x) for x in np.asarray(rsk.keys) if x >= 0]
+assert len(got) == len(set(got)), got
+assert np.isfinite(np.asarray(rsk.scores)).any()
 print("DISTRIBUTED_OK")
 """
+
+
+def test_shard_workload_survives_hash_skew():
+    """Regression: list_len used to be a 2·mean+16 heuristic, which under
+    hash imbalance (every key landing on one shard) undersized the shard
+    stores and tripped build_store's length assert. The true per-shard
+    max must be used."""
+    import numpy as np
+    from repro.core import distributed
+
+    n_shards = 4
+    cand = np.arange(50_000)
+    hot = cand[distributed.mix_hash(cand, n_shards) == 0][:256]
+    assert len(hot) == 256
+    lists = [(hot.astype(np.int32), np.linspace(2.0, 1.0, 256))]
+    stores, g_stats = distributed.shard_workload(lists, n_shards)
+    lengths = np.asarray(stores.lengths)            # (S, P)
+    assert lengths.shape == (n_shards, 1)
+    assert int(lengths.sum()) == 256                # nothing dropped
+    assert int(lengths[0, 0]) == 256                # all on the hot shard
+    # Every key survived the round-trip onto shard 0.
+    keys0 = np.asarray(stores.keys)[0, 0]
+    assert set(keys0[keys0 >= 0].tolist()) == set(hot.tolist())
 
 
 @pytest.mark.slow

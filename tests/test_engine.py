@@ -3,16 +3,16 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.data import kg_synth
-from repro.core import engine, plangen
+from conftest import small_workload, TEST_GRID_BINS
+from repro.core import engine, kg, plangen
 from repro.core.types import EngineConfig
 
-CFG = EngineConfig(block=16, k=5, grid_bins=128)
+CFG = EngineConfig(block=16, k=5, grid_bins=TEST_GRID_BINS)
 
 
 @pytest.fixture(scope="module", params=[0, 1, 2])
 def workload(request):
-    return kg_synth.tiny_workload(seed=request.param, n_queries=10)
+    return small_workload(seed=request.param, n_queries=10)
 
 
 def test_trinit_is_exact_topk(workload):
@@ -104,11 +104,65 @@ def test_batched_equals_single(workload):
 
 def test_pallas_lookup_path_matches_ref():
     """Engine with use_pallas=True (interpret) equals the jnp path."""
-    wl = kg_synth.tiny_workload(seed=4, n_queries=3)
-    cfg_p = EngineConfig(block=16, k=5, grid_bins=128, use_pallas=True)
+    wl = small_workload(seed=4, n_queries=3)
+    cfg_p = EngineConfig(block=16, k=5, grid_bins=TEST_GRID_BINS,
+                         use_pallas=True)
     for i in range(3):
         q = jnp.asarray(wl.queries[i])
         r1 = engine.run_query(wl.store, wl.relax, q, CFG, "trinit")
         r2 = engine.run_query(wl.store, wl.relax, q, cfg_p, "trinit")
         np.testing.assert_allclose(np.asarray(r1.scores),
                                    np.asarray(r2.scores), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# seen_cap ring regression: eviction + re-pull must not corrupt the top-k.
+# ---------------------------------------------------------------------------
+
+def _ring_kg():
+    """KG engineered so stream 0 re-pulls key 1000 (via its relaxation)
+    well after the original copy was evicted from a tiny seen ring.
+
+    Stream 0's merged order: 1000 (1.0), 40 join-less fillers
+    (0.99..0.96), 1000 again via the w=0.95 relaxation, 10 stray relaxed
+    keys, the real join keys 1001-1004 (0.5..0.47), then a long slow tail
+    that forces several full ring wraps before the corner bound closes.
+    Stream 1 is 8 items and never wraps. True top-5 is unambiguous:
+    1000 (2.0) then 1001-1004 (1.49, 1.47, 1.45, 1.43).
+    """
+    p0_keys = np.concatenate([[1000], np.arange(2000, 2040),
+                              [1001, 1002, 1003, 1004],
+                              np.arange(3000, 3060)]).astype(np.int32)
+    p0_scores = np.concatenate([[1.0], np.linspace(0.99, 0.96, 40),
+                                [0.5, 0.49, 0.48, 0.47],
+                                np.linspace(0.46, 0.44, 60)])
+    p1_keys = np.asarray([1000, 1001, 1002, 1003, 1004,
+                          5000, 5001, 5002], np.int32)
+    p1_scores = np.asarray([1.0, 0.99, 0.98, 0.97, 0.96, 0.35, 0.3, 0.25])
+    p2_keys = np.concatenate([[1000], np.arange(4000, 4010)]).astype(np.int32)
+    p2_scores = np.concatenate([[1.0], np.linspace(0.9, 0.8, 10)])
+    store = kg.build_store([(p0_keys, p0_scores), (p1_keys, p1_scores),
+                            (p2_keys, p2_scores)])
+    relax = kg.build_relax_table(3, {0: [(2, 0.95)]})
+    return store, relax, jnp.asarray([0, 1], jnp.int32)
+
+
+@pytest.mark.parametrize("seen_cap", [16, 20])
+def test_seen_ring_eviction_topk_exact(seen_cap):
+    """With a tiny seen_cap (≥ 2 ring wraps; cap=20 is deliberately NOT a
+    multiple of the block) the top-k keys stay unique and match the
+    naive_full_scan oracle. Regression for the ring cluster: misaligned
+    wrap overwrites left half-stale probe-able fragments, and an evicted
+    key re-pulled from a later source could occupy two top-k slots."""
+    store, relax, q = _ring_kg()
+    cfg = EngineConfig(block=8, k=5, grid_bins=TEST_GRID_BINS,
+                       seen_cap=seen_cap)
+    res = engine.run_query(store, relax, q, cfg, "trinit")
+    keys = [int(x) for x in np.asarray(res.keys) if x >= 0]
+    assert len(keys) == len(set(keys)), f"duplicate top-k keys: {keys}"
+    bk, bs = engine.naive_full_scan(store, relax, q, cfg.k, 6000)
+    np.testing.assert_array_equal(np.asarray(bk), np.asarray(res.keys))
+    np.testing.assert_allclose(np.asarray(bs), np.asarray(res.scores),
+                               rtol=1e-5)
+    # Stream 0 alone pulls several multiples of the cap: ≥ 2 full wraps.
+    assert int(res.n_pulled) >= 3 * seen_cap

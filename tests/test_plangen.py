@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.data import kg_synth
+from conftest import small_workload, TEST_GRID_BINS
 from repro.core import engine, kg, plangen
 from repro.core.types import EngineConfig, PAD_KEY
 
@@ -81,10 +81,11 @@ def test_plan_decisions_on_crafted_kgs():
 def test_per_relax_plan_subset_of_per_pattern():
     """The (T, R) plan is pointwise ⊆ its per-pattern coarsening, and both
     are False on padded relaxation slots."""
-    wl = kg_synth.tiny_workload(seed=0, n_queries=6)
+    wl = small_workload(seed=0, n_queries=6)
     for i in range(len(wl.queries)):
         q = jnp.asarray(wl.queries[i])
-        mask = np.asarray(plangen.plan(wl.store, wl.relax, q, 5, 128))
+        mask = np.asarray(plangen.plan(wl.store, wl.relax, q, 5,
+                                       TEST_GRID_BINS))
         coarse = np.asarray(plangen.per_pattern_plan(jnp.asarray(mask)))
         assert not np.any(mask & ~coarse)
         safe = np.where(np.asarray(q) >= 0, np.asarray(q), 0)
@@ -96,8 +97,8 @@ def test_per_relax_plan_subset_of_per_pattern():
 def test_per_relax_never_pulls_more_than_per_pattern(seed):
     """Per-relaxation speculation prunes sibling relaxations that the
     per-pattern plan would drag into the merge — pulls can only shrink."""
-    wl = kg_synth.tiny_workload(seed=seed, n_queries=8)
-    cfg = EngineConfig(block=16, k=5, grid_bins=128)
+    wl = small_workload(seed=seed, n_queries=8)
+    cfg = EngineConfig(block=16, k=5, grid_bins=TEST_GRID_BINS)
     pulls_pr, pulls_pp = [], []
     for i in range(len(wl.queries)):
         q = jnp.asarray(wl.queries[i])
