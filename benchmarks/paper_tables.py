@@ -252,6 +252,96 @@ def planner_cost(fast: bool = False):
     return "\n".join(out), rows
 
 
+def serving_throughput(fast: bool = False):
+    """Micro-batched serving vs the sequential ``run_query`` loop.
+
+    Sweeps micro-batch size over a serving-cell workload (short
+    post-pushdown posting lists, paper-granularity small-block pulls) and
+    reports QPS, per-request latency percentiles, and the wasted-iteration
+    fraction (lockstep trips finished lanes sat frozen). The batched
+    top-k keys/scores are asserted element-wise identical to per-query
+    ``run_query`` — batching is a pure throughput transform.
+
+    Caveat for reading the numbers: on a small CPU the executor's
+    per-trip work is partly compute-bound, so batching amortizes dispatch
+    but cannot beat compute conservation; the speedup column grows with
+    how dispatch-bound the host is (and on accelerators, where lanes
+    vectorize across the batch for free). DESIGN.md §8.
+    """
+    from repro.launch import batching
+
+    L, B, G, n_relax = 32, 8, 256, 3
+    # Q stays 64 in the fast profile: the planned-work scheduler needs a
+    # few batches' worth of requests per sweep point to compose
+    # similar-cost lanes, and the sweep is seconds-scale at this geometry.
+    Q = 64
+    batch_sizes = (1, 4, 16) if fast else (1, 4, 16, 64)
+    wl = kg_synth.make_workload("xkg_mini", list_len=L, n_queries=Q,
+                                seed=0, n_relax=n_relax)
+    cfg = EngineConfig(block=B, k=10, grid_bins=G)
+    queries = [np.asarray(q) for q in wl.queries]
+    t_set = tuple(sorted({int((q >= 0).sum()) for q in queries}))
+
+    # Sequential baseline (the pre-batching serving loop).
+    q0 = jnp.asarray(queries[0])
+    jax.block_until_ready(
+        engine.run_query(wl.store, wl.relax, q0, cfg, "specqp").scores)
+    seq_keys, seq_lat = [], []
+    t0 = time.perf_counter()
+    for q in queries:
+        t1 = time.perf_counter()
+        r = engine.run_query(wl.store, wl.relax, jnp.asarray(q), cfg,
+                             "specqp")
+        jax.block_until_ready(r.scores)
+        seq_lat.append(time.perf_counter() - t1)
+        seq_keys.append((np.asarray(r.keys), np.asarray(r.scores)))
+    seq_wall = time.perf_counter() - t0
+
+    rows = [dict(batch=0, qps=Q / seq_wall,
+                 p50=float(np.percentile(seq_lat, 50)),
+                 p99=float(np.percentile(seq_lat, 99)),
+                 wasted=0.0, speedup=1.0, match=1.0)]
+    for bs in batch_sizes:
+        bcfg = batching.BatchingConfig(
+            max_batch=bs, max_wait_s=0.002,
+            q_buckets=tuple(b for b in (1, 4, 16, 64) if b <= bs),
+            t_buckets=t_set)
+        ex = batching.BatchExecutor(wl.store, wl.relax, cfg, "specqp", bcfg)
+        ex.warmup()
+        ex.run(queries)          # warm the scheduler path end to end
+        ex.reset_stats()
+        t0 = time.perf_counter()
+        results = ex.run(queries)
+        wall = time.perf_counter() - t0
+        match = float(np.mean([
+            np.array_equal(r.keys, sk) and np.array_equal(r.scores, ss)
+            for r, (sk, ss) in zip(results, seq_keys)]))
+        # Offline latency = the request's micro-batch wall share (execute
+        # time of its batch + its amortized share of the plan phase).
+        plan_amort = ex.plan_total_s / max(len(queries), 1)
+        lat = np.asarray([s.exec_s + plan_amort for s in ex.stats
+                          for _ in range(s.n_requests)])
+        rows.append(dict(batch=bs, qps=Q / wall,
+                         p50=float(np.percentile(lat, 50)),
+                         p99=float(np.percentile(lat, 99)),
+                         wasted=ex.wasted_fraction(),
+                         speedup=seq_wall / wall, match=match))
+
+    out = ["\n### Serving throughput — micro-batched executor vs the "
+           f"sequential run_query loop (xkg_mini L={L} B={B} R={n_relax}, "
+           f"{Q} queries, specqp)",
+           "| batch | QPS | p50 (ms) | p99 (ms) | wasted-iter frac | "
+           "speedup vs sequential | top-k match |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        label = "seq" if r["batch"] == 0 else str(r["batch"])
+        out.append(
+            f"| {label} | {r['qps']:.1f} | {r['p50']*1e3:.2f} "
+            f"| {r['p99']*1e3:.2f} | {r['wasted']:.3f} "
+            f"| {r['speedup']:.2f}x | {r['match']:.2f} |")
+    return "\n".join(out), rows
+
+
 def run_all(fast: bool = False):
     kw = dict(list_len=256, n_queries=16) if fast else dict(list_len=512)
     results = {}
@@ -259,11 +349,13 @@ def run_all(fast: bool = False):
         _, res = run_dataset(ds, **kw)
         results[ds] = res
     plan_report, plan_rows = planner_cost(fast)
+    serve_report, serve_rows = serving_throughput(fast)
     report = "\n".join([
         table2_precision(results),
         table3_prediction_accuracy(results),
         table4_score_error(results),
         fig6to9_efficiency(results),
         plan_report,
+        serve_report,
     ])
-    return report, results, plan_rows
+    return report, results, plan_rows, serve_rows

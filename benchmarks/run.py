@@ -24,7 +24,8 @@ def main() -> None:
     from benchmarks import paper_tables
 
     t0 = time.time()
-    report, results, plan_rows = paper_tables.run_all(fast=args.fast)
+    report, results, plan_rows, serve_rows = paper_tables.run_all(
+        fast=args.fast)
     dt = time.time() - t0
 
     # CSV contract: name,us_per_call,derived
@@ -63,6 +64,16 @@ def main() -> None:
               f"{r['plan_sketch']/max(r['exec'],1e-9):.3f}")
         print(f"plan_mask_agreement_L{r['L']},{r['plan_sketch']*1e6:.0f},"
               f"{r['agree']:.3f}")
+    for r in serve_rows:
+        # us_per_call = per-request p50 latency; derived varies per row.
+        tag = "seq" if r["batch"] == 0 else f"b{r['batch']}"
+        print(f"serving_qps_{tag},{r['p50']*1e6:.0f},{r['qps']:.1f}")
+        print(f"serving_p99_{tag},{r['p99']*1e6:.0f},{r['p99']*1e3:.2f}")
+        print(f"serving_speedup_{tag},{r['p50']*1e6:.0f},"
+              f"{r['speedup']:.2f}")
+        print(f"serving_wasted_{tag},{r['p50']*1e6:.0f},{r['wasted']:.3f}")
+        print(f"serving_topk_match_{tag},{r['p50']*1e6:.0f},"
+              f"{r['match']:.3f}")
 
     print(report)
     os.makedirs("results", exist_ok=True)

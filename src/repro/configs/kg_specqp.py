@@ -55,8 +55,11 @@ def store_specs(n_shards: int):
         lengths=base.spec((n_shards, Pn), i32),
         sorted_keys=base.spec((n_shards, Pn, L), i32),
         stats=base.spec((n_shards, Pn, 4), f32),
+        # Adaptive signature width: the ingest sizes W from the longest
+        # list (8k-item shards get 16k words — lists ≫ 2k keys/lane would
+        # saturate the old fixed 1024-word default).
         sketch=base.spec((n_shards, Pn, sketches.SKETCH_LANES,
-                          sketches.SKETCH_WORDS), jnp.uint32),
+                          sketches.adaptive_words(L_SHARD)), jnp.uint32),
     )
     relax = RelaxTable(ids=base.spec((Pn, N_RELAX), i32),
                        weights=base.spec((Pn, N_RELAX), f32))

@@ -28,6 +28,7 @@ from repro import compat
 from repro.core.types import (TripleStore, RelaxTable, EngineResult,
                               EngineConfig, PAD_KEY)
 from repro.core import kg as kglib
+from repro.core import sketches as sketchlib
 from repro.core import engine, estimator, histogram, plangen
 from repro.core import operators as ops
 
@@ -83,6 +84,12 @@ def shard_workload(pattern_lists, n_shards: int,
                                int(np.bincount(sid,
                                                minlength=n_shards).max()))
 
+    # One signature geometry for every shard, sized from the GLOBAL longest
+    # list: shard stores stack into a single (S, P, ...) pytree and their
+    # sketch estimates psum, so per-shard adaptive widths (which would
+    # differ under hash skew) are not an option here.
+    sketch_words = sketchlib.adaptive_words(
+        max((len(k) for k, _ in pattern_lists), default=1))
     shard_stores = []
     for s_id in range(n_shards):
         per_pattern = []
@@ -90,7 +97,7 @@ def shard_workload(pattern_lists, n_shards: int,
             sel = sid == s_id
             per_pattern.append((k[sel].astype(np.int32), sn[sel]))
         st = kglib.build_store(per_pattern, list_len=list_len,
-                               normalize=False)
+                               normalize=False, sketch_words=sketch_words)
         shard_stores.append(st)
 
     stores = jax.tree_util.tree_map(
@@ -166,7 +173,7 @@ def _shard_body(store: TripleStore, relax: RelaxTable,
         n_iters = jax.lax.pmax(n_iters, ax)
     return EngineResult(keys=keys, scores=scores, n_pulled=n_pulled,
                         n_answers=n_answers, n_iters=n_iters,
-                        relax_mask=mask)
+                        n_wasted=st.n_wasted, relax_mask=mask)
 
 
 def run_query_sharded(skg: ShardedKG, pattern_ids: jax.Array,
@@ -197,7 +204,8 @@ def run_query_sharded(skg: ShardedKG, pattern_ids: jax.Array,
                   jax.tree_util.tree_map(lambda _: rep, skg.relax),
                   rep, rep),
         out_specs=EngineResult(keys=rep, scores=rep, n_pulled=rep,
-                               n_answers=rep, n_iters=rep, relax_mask=rep),
+                               n_answers=rep, n_iters=rep, n_wasted=rep,
+                               relax_mask=rep),
         check_vma=False,
     )
     return fn(skg.stores, skg.relax, skg.global_stats, pattern_ids)
@@ -229,7 +237,7 @@ def make_batched_sharded_fn(cfg: EngineConfig, mode: str,
                       jax.tree_util.tree_map(lambda _: rep, relax),
                       rep, rep),
             out_specs=EngineResult(keys=rep, scores=rep, n_pulled=rep,
-                                   n_answers=rep, n_iters=rep,
+                                   n_answers=rep, n_iters=rep, n_wasted=rep,
                                    relax_mask=rep),
             check_vma=False,
         )

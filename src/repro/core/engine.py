@@ -33,12 +33,12 @@ class _LoopState(NamedTuple):
     n_pulled: jax.Array
     n_answers: jax.Array
     n_iters: jax.Array
+    n_wasted: jax.Array     # lockstep trips spent frozen (batch exec only)
     done: jax.Array
 
 
-def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
-    """Run the n-ary rank join to completion. Returns final _LoopState."""
-    T, R1, L = streams.keys.shape
+def _seen_size(R1: int, L: int, cfg: EngineConfig) -> int:
+    """Per-stream seen-ring length N (a whole number of B-item blocks)."""
     B = cfg.block
     N = R1 * L + 2 * B
     if cfg.seen_cap:
@@ -48,7 +48,34 @@ def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
     # would split appends across two old blocks, leaving half-overwritten
     # stale fragments probe-able forever (duplicate keys double-count in the
     # lookup contraction).
-    N = -(-N // B) * B
+    return -(-N // B) * B
+
+
+def _max_iters(T: int, R1: int, L: int, cfg: EngineConfig) -> int:
+    return T * (R1 * L // cfg.block + 2)
+
+
+def _init_state(T: int, R1: int, N: int, k: int) -> _LoopState:
+    return _LoopState(
+        cursors=jnp.zeros((T, R1), jnp.int32),
+        seen_keys=jnp.full((T, N), PAD_KEY, jnp.int32),
+        seen_scores=jnp.zeros((T, N), jnp.float32),
+        seen_cnt=jnp.zeros((T,), jnp.int32),
+        top_keys=jnp.full((k,), PAD_KEY, jnp.int32),
+        top_scores=jnp.full((k,), NEG_INF, jnp.float32),
+        n_pulled=jnp.int32(0), n_answers=jnp.int32(0),
+        n_iters=jnp.int32(0), n_wasted=jnp.int32(0), done=jnp.array(False))
+
+
+def _step(streams: ops.MergedStreams, st: _LoopState, cfg: EngineConfig,
+          N: int, batched: bool = False) -> _LoopState:
+    """One pull-join-bound iteration of the rank join for ONE query.
+
+    Shared by the single-query executor (which runs it until ``done``) and
+    the batch executor (which vmaps it and freezes finished lanes).
+    """
+    T, R1, L = streams.keys.shape
+    B = cfg.block
     k = cfg.k
 
     stream_max = jnp.max(
@@ -58,98 +85,181 @@ def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> tuple:
     active = streams.stream_active
     sum_max = jnp.sum(jnp.where(active, stream_max, 0.0))
 
-    max_iters = T * (R1 * L // B + 2)
-
     def head_scores(cursors):
         return jax.vmap(ops.merged_head_score)(
             streams.keys, streams.scores, streams.lengths, cursors)
 
-    def body(st: _LoopState) -> _LoopState:
-        nxt = head_scores(st.cursors)                           # (T,)
-        nxt = jnp.where(active, nxt, NEG_INF)
-        t_star = jnp.argmax(nxt)
+    nxt = head_scores(st.cursors)                           # (T,)
+    nxt = jnp.where(active, nxt, NEG_INF)
+    t_star = jnp.argmax(nxt)
 
-        blk_k, blk_s, new_cur_t = ops.pull_block(
-            streams.keys[t_star], streams.scores[t_star],
-            streams.lengths[t_star], st.cursors[t_star], B)
-        n_taken = jnp.sum(blk_k != PAD_KEY)
-        blk_k, blk_s = ops.dedup_block(blk_k, blk_s)
-        # Drop keys this stream already emitted (earlier pull ⇒ ≥ score).
-        _, seen_before = ops.lookup_scores(
-            st.seen_keys[t_star], st.seen_scores[t_star], blk_k,
-            st.seen_cnt[t_star], cfg.use_pallas, cfg.pallas_interpret)
-        blk_k = jnp.where(seen_before, PAD_KEY, blk_k)
-        blk_s = jnp.where(seen_before, NEG_INF, blk_s)
+    blk_k, blk_s, new_cur_t = ops.pull_block(
+        streams.keys[t_star], streams.scores[t_star],
+        streams.lengths[t_star], st.cursors[t_star], B)
+    n_taken = jnp.sum(blk_k != PAD_KEY)
+    blk_k, blk_s = ops.dedup_block(blk_k, blk_s)
+    # Drop keys this stream already emitted (earlier pull ⇒ ≥ score).
+    _, seen_before = ops.lookup_scores(
+        st.seen_keys[t_star], st.seen_scores[t_star], blk_k,
+        st.seen_cnt[t_star], cfg.use_pallas, cfg.pallas_interpret)
+    blk_k = jnp.where(seen_before, PAD_KEY, blk_k)
+    blk_s = jnp.where(seen_before, NEG_INF, blk_s)
 
-        # Join the fresh block against every other stream's seen buffer.
-        def probe(j):
-            s, f = ops.lookup_scores(
-                st.seen_keys[j], st.seen_scores[j], blk_k, st.seen_cnt[j],
-                cfg.use_pallas, cfg.pallas_interpret)
-            return s, f
-        s_j, f_j = jax.vmap(probe)(jnp.arange(T))               # (T, B)
-        others = active & (jnp.arange(T) != t_star)
-        contrib = jnp.sum(jnp.where(others[:, None], s_j, 0.0), axis=0)
-        matched = jnp.all(jnp.where(others[:, None], f_j, True), axis=0)
-        cand_ok = matched & (blk_k != PAD_KEY)
-        cand_scores = jnp.where(cand_ok, blk_s + contrib, NEG_INF)
-        cand_keys = jnp.where(cand_ok, blk_k, PAD_KEY)
-        top_keys, top_scores = ops.topk_insert(
-            st.top_keys, st.top_scores, cand_keys, cand_scores, k)
+    # Join the fresh block against every other stream's seen buffer.
+    def probe(j):
+        s, f = ops.lookup_scores(
+            st.seen_keys[j], st.seen_scores[j], blk_k, st.seen_cnt[j],
+            cfg.use_pallas, cfg.pallas_interpret)
+        return s, f
+    s_j, f_j = jax.vmap(probe)(jnp.arange(T))               # (T, B)
+    others = active & (jnp.arange(T) != t_star)
+    contrib = jnp.sum(jnp.where(others[:, None], s_j, 0.0), axis=0)
+    matched = jnp.all(jnp.where(others[:, None], f_j, True), axis=0)
+    cand_ok = matched & (blk_k != PAD_KEY)
+    cand_scores = jnp.where(cand_ok, blk_s + contrib, NEG_INF)
+    cand_keys = jnp.where(cand_ok, blk_k, PAD_KEY)
+    top_keys, top_scores = ops.topk_insert(
+        st.top_keys, st.top_scores, cand_keys, cand_scores, k)
 
-        # Append the block to t*'s seen buffer (fixed B slots per pull;
-        # wraps as a ring when a seen_cap is configured). N is a multiple
-        # of B, so start is always block-aligned and start + B <= N.
-        def append(t):
-            start = st.seen_cnt[t] % jnp.int32(N)
+    # Append the block to t*'s seen buffer (fixed B slots per pull;
+    # wraps as a ring when a seen_cap is configured). N is a multiple
+    # of B, so start is always block-aligned and start + B <= N. Two
+    # equivalent implementations: the single-query path uses
+    # dynamic_update_slice (cheapest un-vmapped); the batch executor sets
+    # ``batched=True`` to use a one-hot mask-and-reduce instead, because a
+    # slice update with per-lane starts lowers to an XLA scatter that the
+    # CPU backend runs as a scalar loop under the lane vmap.
+    blk_s_store = jnp.where(blk_s == NEG_INF, 0.0, blk_s)
+
+    def append(t):
+        start = st.seen_cnt[t] % jnp.int32(N)
+        if batched:
+            rel = jnp.arange(N) - start                    # (N,)
+            oh = rel[:, None] == jnp.arange(B)[None, :]    # (N, B)
+            in_win = (rel >= 0) & (rel < B)
+            upd_k = jnp.where(
+                in_win,
+                jnp.sum(jnp.where(oh, blk_k[None, :], 0), axis=1),
+                st.seen_keys[t])
+            upd_s = jnp.where(
+                in_win,
+                jnp.sum(jnp.where(oh, blk_s_store[None, :], 0.0), axis=1),
+                st.seen_scores[t])
+        else:
             upd_k = jax.lax.dynamic_update_slice(
                 st.seen_keys[t], blk_k, (start,))
             upd_s = jax.lax.dynamic_update_slice(
-                st.seen_scores[t], jnp.where(blk_s == NEG_INF, 0.0, blk_s),
-                (start,))
-            sel = t == t_star
-            return (jnp.where(sel, upd_k, st.seen_keys[t]),
-                    jnp.where(sel, upd_s, st.seen_scores[t]))
-        seen_keys, seen_scores = jax.vmap(append)(jnp.arange(T))
-        seen_cnt = st.seen_cnt + jnp.where(
-            jnp.arange(T) == t_star, B, 0).astype(jnp.int32)
-        cursors = jax.vmap(
-            lambda t, nc: jnp.where(t == t_star, nc, st.cursors[t]),
-            in_axes=(0, None))(jnp.arange(T), new_cur_t)
+                st.seen_scores[t], blk_s_store, (start,))
+        sel = t == t_star
+        return (jnp.where(sel, upd_k, st.seen_keys[t]),
+                jnp.where(sel, upd_s, st.seen_scores[t]))
+    seen_keys, seen_scores = jax.vmap(append)(jnp.arange(T))
+    seen_cnt = st.seen_cnt + jnp.where(
+        jnp.arange(T) == t_star, B, 0).astype(jnp.int32)
+    cursors = jax.vmap(
+        lambda t, nc: jnp.where(t == t_star, nc, st.cursors[t]),
+        in_axes=(0, None))(jnp.arange(T), new_cur_t)
 
-        # HRJN-style n-ary corner bound for any undiscovered answer.
-        nxt2 = head_scores(cursors)
-        nxt2 = jnp.where(active, nxt2, NEG_INF)
-        tau = jnp.max(nxt2 + (sum_max - jnp.where(active, stream_max, 0.0)))
-        kth = top_scores[k - 1]
-        exhausted = jnp.all(nxt2 == NEG_INF)
-        done = (kth >= tau) | exhausted
+    # HRJN-style n-ary corner bound for any undiscovered answer.
+    nxt2 = head_scores(cursors)
+    nxt2 = jnp.where(active, nxt2, NEG_INF)
+    tau = jnp.max(nxt2 + (sum_max - jnp.where(active, stream_max, 0.0)))
+    kth = top_scores[k - 1]
+    exhausted = jnp.all(nxt2 == NEG_INF)
+    done = (kth >= tau) | exhausted
 
-        return _LoopState(
-            cursors=cursors, seen_keys=seen_keys, seen_scores=seen_scores,
-            seen_cnt=seen_cnt, top_keys=top_keys, top_scores=top_scores,
-            n_pulled=st.n_pulled + n_taken.astype(jnp.int32),
-            # Counts answer-object *materializations*: under a seen_cap, a
-            # key evicted and re-pulled from a later source joins again and
-            # is counted again — deliberate, the counter is a work/memory
-            # proxy and the re-join is real extra work the cap caused (the
-            # top-k buffer itself dedups, so results stay correct).
-            n_answers=st.n_answers + jnp.sum(cand_ok).astype(jnp.int32),
-            n_iters=st.n_iters + 1, done=done)
+    return _LoopState(
+        cursors=cursors, seen_keys=seen_keys, seen_scores=seen_scores,
+        seen_cnt=seen_cnt, top_keys=top_keys, top_scores=top_scores,
+        n_pulled=st.n_pulled + n_taken.astype(jnp.int32),
+        # Counts answer-object *materializations*: under a seen_cap, a
+        # key evicted and re-pulled from a later source joins again and
+        # is counted again — deliberate, the counter is a work/memory
+        # proxy and the re-join is real extra work the cap caused (the
+        # top-k buffer itself dedups, so results stay correct).
+        n_answers=st.n_answers + jnp.sum(cand_ok).astype(jnp.int32),
+        n_iters=st.n_iters + 1, n_wasted=st.n_wasted, done=done)
 
-    init = _LoopState(
-        cursors=jnp.zeros((T, R1), jnp.int32),
-        seen_keys=jnp.full((T, N), PAD_KEY, jnp.int32),
-        seen_scores=jnp.zeros((T, N), jnp.float32),
-        seen_cnt=jnp.zeros((T,), jnp.int32),
-        top_keys=jnp.full((k,), PAD_KEY, jnp.int32),
-        top_scores=jnp.full((k,), NEG_INF, jnp.float32),
-        n_pulled=jnp.int32(0), n_answers=jnp.int32(0),
-        n_iters=jnp.int32(0), done=jnp.array(False))
 
+def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> _LoopState:
+    """Run the n-ary rank join to completion. Returns final _LoopState."""
+    T, R1, L = streams.keys.shape
+    N = _seen_size(R1, L, cfg)
+    max_iters = _max_iters(T, R1, L, cfg)
     final = jax.lax.while_loop(
-        lambda s: (~s.done) & (s.n_iters < max_iters), body, init)
+        lambda s: (~s.done) & (s.n_iters < max_iters),
+        lambda s: _step(streams, s, cfg, N),
+        _init_state(T, R1, N, cfg.k))
     return final
+
+
+def _execute_batch(streams: ops.MergedStreams,
+                   cfg: EngineConfig) -> _LoopState:
+    """Batch-aware executor: every field of ``streams`` has a leading (Q,)
+    axis; returns a _LoopState whose fields all have a leading (Q,) axis.
+
+    One ``lax.while_loop`` drives the whole micro-batch; each trip vmaps
+    ``_step`` across lanes, but a lane whose HRJN bound already closed (or
+    that hit its iteration budget) gets a *masked no-op body*: its state is
+    frozen, so its cursors stop advancing, its seen rings stop mutating,
+    and its counters (n_pulled / n_answers / n_iters) equal the values the
+    single-query executor would report — batched results are element-wise
+    identical to per-query ``run_query``. The loop exits when every lane is
+    done, and ``n_wasted`` counts the lockstep trips each lane sat frozen
+    (the price of SIMD batching; benchmarks report the fraction).
+    """
+    Q, T, R1, L = streams.keys.shape
+    N = _seen_size(R1, L, cfg)
+    max_iters = _max_iters(T, R1, L, cfg)
+
+    def lane_step(strm, st: _LoopState) -> _LoopState:
+        live = (~st.done) & (st.n_iters < max_iters)
+        new = _step(strm, st, cfg, N, batched=True)
+        # Freeze only the result-bearing fields of a finished lane (top-k,
+        # counters, done). The big merge state (cursors, seen rings) may
+        # keep mutating harmlessly — nothing reads it once the lane's
+        # outputs are frozen — and skipping its per-trip select avoids
+        # copying the (Q, T, N) rings through a where every trip.
+        keep = lambda old, nw: jnp.where(live, nw, old)
+        return _LoopState(
+            cursors=new.cursors, seen_keys=new.seen_keys,
+            seen_scores=new.seen_scores, seen_cnt=new.seen_cnt,
+            top_keys=keep(st.top_keys, new.top_keys),
+            top_scores=keep(st.top_scores, new.top_scores),
+            n_pulled=keep(st.n_pulled, new.n_pulled),
+            n_answers=keep(st.n_answers, new.n_answers),
+            n_iters=keep(st.n_iters, new.n_iters),
+            n_wasted=st.n_wasted + jnp.where(live, 0, 1).astype(jnp.int32),
+            done=st.done | new.done)
+
+    init = jax.vmap(lambda _: _init_state(T, R1, N, cfg.k))(jnp.arange(Q))
+    final = jax.lax.while_loop(
+        lambda s: jnp.any((~s.done) & (s.n_iters < max_iters)),
+        lambda s: jax.vmap(lane_step)(streams, s),
+        init)
+    return final
+
+
+def plan_for_mode(store: TripleStore, relax: RelaxTable,
+                  pattern_ids: jax.Array, cfg: EngineConfig,
+                  mode: str) -> jax.Array:
+    """The (T, R) relaxation mask for one query under ``mode``.
+
+    mode ∈ {"trinit", "specqp", "specqp_pattern", "join_only"}.
+    """
+    R = relax.ids.shape[1]
+    if mode == "trinit":
+        return plangen.trinit_plan(pattern_ids, R)
+    if mode == "specqp":
+        return plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
+                            cfg.plan_slack, cfg.cardinality_mode)
+    if mode == "specqp_pattern":
+        return plangen.per_pattern_plan(
+            plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
+                         cfg.plan_slack, cfg.cardinality_mode))
+    if mode == "join_only":
+        return jnp.zeros((pattern_ids.shape[0], R), dtype=bool)
+    raise ValueError(mode)
 
 
 @partial(jax.jit, static_argnames=("cfg", "mode"))
@@ -159,34 +269,60 @@ def run_query(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
 
     mode ∈ {"trinit", "specqp", "specqp_pattern", "join_only"}.
     """
-    R = relax.ids.shape[1]
-    if mode == "trinit":
-        mask = plangen.trinit_plan(pattern_ids, R)
-    elif mode == "specqp":
-        mask = plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
-                            cfg.plan_slack, cfg.cardinality_mode)
-    elif mode == "specqp_pattern":
-        mask = plangen.per_pattern_plan(
-            plangen.plan(store, relax, pattern_ids, cfg.k, cfg.grid_bins,
-                         cfg.plan_slack, cfg.cardinality_mode))
-    elif mode == "join_only":
-        mask = jnp.zeros((pattern_ids.shape[0], R), dtype=bool)
-    else:
-        raise ValueError(mode)
+    mask = plan_for_mode(store, relax, pattern_ids, cfg, mode)
     streams = ops.gather_streams(store, relax, pattern_ids, mask)
     st = _execute(streams, cfg)
     return EngineResult(
         keys=st.top_keys, scores=st.top_scores, n_pulled=st.n_pulled,
-        n_answers=st.n_answers, n_iters=st.n_iters, relax_mask=mask)
+        n_answers=st.n_answers, n_iters=st.n_iters, n_wasted=st.n_wasted,
+        relax_mask=mask)
+
+
+@partial(jax.jit, static_argnames=("cfg", "mode"))
+def plan_query_batch(store, relax, pattern_ids_batch, cfg: EngineConfig,
+                     mode: str = "specqp") -> jax.Array:
+    """(Q, T, R) plans for a (Q, T) query batch — the serving layer's plan
+    phase. Splitting planning from execution lets the scheduler compose
+    micro-batches by *planned* work (sum of enabled source lengths), which
+    is what keeps lockstep waste low in ``launch.batching``."""
+    return jax.vmap(
+        lambda pids: plan_for_mode(store, relax, pids, cfg, mode)
+    )(pattern_ids_batch)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def run_query_batch_with_masks(store, relax, pattern_ids_batch,
+                               masks: jax.Array,
+                               cfg: EngineConfig) -> EngineResult:
+    """Execute a (Q, T) batch under precomputed (Q, T, R) plans."""
+    streams = jax.vmap(
+        lambda pids, m: ops.gather_streams(store, relax, pids, m)
+    )(pattern_ids_batch, masks)
+    st = _execute_batch(streams, cfg)
+    return EngineResult(
+        keys=st.top_keys, scores=st.top_scores, n_pulled=st.n_pulled,
+        n_answers=st.n_answers, n_iters=st.n_iters, n_wasted=st.n_wasted,
+        relax_mask=masks)
 
 
 @partial(jax.jit, static_argnames=("cfg", "mode"))
 def run_query_batch(store, relax, pattern_ids_batch, cfg: EngineConfig,
                     mode: str = "specqp") -> EngineResult:
-    """vmap of run_query over a (Q, T) batch of star queries."""
-    return jax.vmap(
-        lambda pids: run_query.__wrapped__(store, relax, pids, cfg, mode)
+    """Answer a (Q, T) batch of star queries through the batch executor.
+
+    Planning and stream gathering vmap per lane; execution runs under ONE
+    while_loop with lane-masked early exit (``_execute_batch``), so a fast
+    lane stops pulling/merging the moment its own HRJN bound closes instead
+    of shadow-executing until the slowest lane terminates. Results are
+    element-wise identical to per-query ``run_query`` (the serving layer's
+    correctness contract; see tests/test_serving.py), and per-lane
+    ``n_wasted`` exposes the residual lockstep cost.
+    """
+    masks = jax.vmap(
+        lambda pids: plan_for_mode(store, relax, pids, cfg, mode)
     )(pattern_ids_batch)
+    return run_query_batch_with_masks.__wrapped__(
+        store, relax, pattern_ids_batch, masks, cfg)
 
 
 @partial(jax.jit, static_argnames=("k", "n_entities"))

@@ -192,13 +192,14 @@ def leave_one_out_pmfs(pmfs: jax.Array, active: jax.Array) -> jax.Array:
 
     def step(acc, xs):
         pmf, act = xs
-        nxt = jnp.where(act, jnp.convolve(acc, pmf)[:out_len], acc)
+        nxt = jnp.where(act, histogram.conv_truncate(acc, pmf, out_len), acc)
         return nxt, acc      # emit acc BEFORE folding in this pattern
 
     _, prefix = jax.lax.scan(step, delta, (pmfs, active))
     _, suffix_rev = jax.lax.scan(step, delta, (pmfs[::-1], active[::-1]))
     suffix = suffix_rev[::-1]
-    return jax.vmap(lambda p, s: jnp.convolve(p, s)[:out_len])(prefix, suffix)
+    return jax.vmap(
+        lambda p, s: histogram.conv_truncate(p, s, out_len))(prefix, suffix)
 
 
 def score_estimates_from_cards(stats_table: jax.Array, relax: RelaxTable,
@@ -230,7 +231,7 @@ def score_estimates_from_cards(stats_table: jax.Array, relax: RelaxTable,
         w = relax.weights[pid, r]
         safe_rid = jnp.where(rid == PAD_KEY, 0, rid)
         relaxed_pmf = histogram.pattern_pmf(stats_table[safe_rid], w, G)
-        pmf_qr = jnp.convolve(loo[t], relaxed_pmf)[:out_len]
+        pmf_qr = histogram.conv_truncate(loo[t], relaxed_pmf, out_len)
         pmf_qr = pmf_qr / jnp.maximum(jnp.sum(pmf_qr), 1e-30)
         e1 = histogram.expected_order_statistic(
             pmf_qr, n_rel[t, r], jnp.float32(1.0), G)

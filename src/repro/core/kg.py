@@ -41,18 +41,23 @@ def build_store(pattern_lists: list[tuple[np.ndarray, np.ndarray]],
                 list_len: int | None = None,
                 normalize: bool = True,
                 sketch_lanes: int = sketchlib.SKETCH_LANES,
-                sketch_words: int = sketchlib.SKETCH_WORDS) -> TripleStore:
+                sketch_words: int | None = None) -> TripleStore:
     """Build a TripleStore from per-pattern (keys, raw_scores) host arrays.
 
     Scores are normalized per Definition 5 (divide by the list max) unless
     ``normalize=False`` (used by the sharded build, where normalization by
     the *global* max already happened). Lists are sorted by score desc and
     padded to a common length. Bitmap key signatures for the sketched
-    planner (``sketch_lanes`` × ``sketch_words`` words, DESIGN.md §6) are
-    computed here, once per ingest — the sharded build therefore gets
-    shard-local signatures whose estimates psum to global totals. They
-    are built unconditionally (also for exact-mode users): the one-time
-    host cost is small next to the sort/stats pass, and a store carrying
+    planner (``sketch_lanes`` × W words, DESIGN.md §6) are computed here,
+    once per ingest — the sharded build therefore gets shard-local
+    signatures whose estimates psum to global totals. The signature width
+    W is sized adaptively from the ingest's longest list by default
+    (``sketches.adaptive_words``: short lists get narrow cheap sketches,
+    lists ≫ 2k keys no longer saturate linear counting); pass
+    ``sketch_words`` explicitly to pin a fixed geometry (the sharded build
+    does, so every shard's signatures stack and psum). Signatures are
+    built unconditionally (also for exact-mode users): the one-time host
+    cost is small next to the sort/stats pass, and a store carrying
     signatures can serve either ``cardinality_mode`` per query without
     re-ingest.
     """
@@ -88,6 +93,9 @@ def build_store(pattern_lists: list[tuple[np.ndarray, np.ndarray]],
         else:
             stats[p] = compute_pattern_stats(scores[p], 0)
 
+    if sketch_words is None:
+        sketch_words = sketchlib.adaptive_words(
+            max((len(k) for k, _ in pattern_lists), default=1))
     sketch = sketchlib.build_sketches([k for k, _ in pattern_lists],
                                       lanes=sketch_lanes, words=sketch_words)
     return TripleStore(

@@ -62,6 +62,32 @@ from repro.core.types import TripleStore, RelaxTable, PAD_KEY
 SKETCH_LANES = 4
 SKETCH_WORDS = 1024
 
+# Adaptive sizing bounds: floor keeps tiny test stores statistically sane,
+# the cap bounds signature bytes per pattern (16384 words = 64 KiB/lane).
+MIN_WORDS = 128
+MAX_WORDS = 16384
+
+
+def adaptive_words(max_len: int) -> int:
+    """Signature width (uint32 words per lane) sized from ingest stats.
+
+    Sizing rule: m = 32·W ≥ 64·Lmax bits, i.e. W = 2·Lmax rounded up to a
+    power of two. Rationale: linear counting and the AND-fill occupancy
+    model both need the fill well below saturation — source unions run to
+    ~(R+1)·Lmax keys, so 64 bits of budget per list item keeps worst-case
+    union fill ≲ (R+1)/64 and the collision noise of intersection
+    estimates (≈ sqrt(n_a·n_b / total_bits)) under a key at benchmark
+    scales. The rule reproduces the historical fixed default at the
+    benchmark geometry (Lmax = 512 → W = 1024) and widens automatically
+    where the ROADMAP flagged saturation (posting lists ≫ 2k keys/lane).
+    Power-of-two + clamped so shard geometries stay uniform and the jit
+    cache stays small.
+    """
+    words = 2 * max(int(max_len), 1)
+    words = 1 << max(words - 1, 1).bit_length()    # round up to pow2
+    return int(min(max(words, MIN_WORDS), MAX_WORDS))
+
+
 _FULL_WORD = np.uint32(0xFFFFFFFF)
 
 

@@ -83,7 +83,10 @@ class EngineResult:
     scores: jax.Array      # (k,) f32, -inf padded
     n_pulled: jax.Array    # () int32 — items materialized from input lists
     n_answers: jax.Array   # () int32 — (partial) answer objects created
-    n_iters: jax.Array     # () int32 — while-loop trips
+    n_iters: jax.Array     # () int32 — while-loop trips doing real work
+    n_wasted: jax.Array    # () int32 — lockstep trips spent frozen after
+                           # this lane finished (0 outside batch execution;
+                           # see engine._execute_batch / DESIGN.md §8)
     relax_mask: jax.Array  # (T, R) bool — which relaxation sources joined
                            # the merge (the plan; all-True for TriniT). The
                            # per-pattern view is relax_mask.any(axis=1).

@@ -1,0 +1,387 @@
+"""Micro-batched serving layer: shape buckets + request queue (DESIGN.md §8).
+
+The engine answers a batch in one jit'd call (``engine.run_query_batch``,
+lane-masked early exit), but live traffic arrives one query at a time with
+ragged pattern counts. This module is the glue between the two:
+
+* **Shape buckets** — every distinct ``(Q, T)`` shape is a separate XLA
+  compilation. Requests' ``(T,)`` pattern vectors are padded up to a small
+  fixed set of T buckets, and batches are padded up to a small set of Q
+  buckets, so steady-state traffic reuses a handful of jit specializations
+  instead of compiling per shape. Pad lanes are all-``PAD_KEY`` queries;
+  the executor proves them done on their first trip, and pad patterns are
+  inactive streams — both are unpadded away before results are returned.
+
+* **Micro-batching** — ``MicroBatcher`` queues concurrent requests and
+  flushes a batch when it reaches ``max_batch`` or the oldest request has
+  waited ``max_wait_s``, the standard throughput/latency dial of serving
+  stacks. ``BatchExecutor`` is the synchronous core (give it a list of
+  queries, get per-request results); the queue layer sits on top and is
+  optional — offline consumers (benchmarks, bulk evaluation) call the
+  executor directly.
+
+Correctness contract: per-request results are element-wise identical to
+``engine.run_query`` on the unpadded query (tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.types import EngineConfig, PAD_KEY
+
+
+def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket ≥ n (buckets sorted ascending)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"{n} exceeds the largest bucket {buckets[-1]}")
+
+
+def default_t_buckets(t_max: int) -> tuple[int, ...]:
+    """Powers of two from 2 up to a cover of t_max.
+
+    The cover itself is a power of two (never t_max verbatim): with
+    ``t_buckets=None`` every observed T must round UP to a shared bucket,
+    or each distinct pattern count would become its own jit specialization
+    — exactly the per-shape compile churn buckets exist to prevent.
+    """
+    out, b = [], 2
+    while b < max(t_max, 2):
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchingConfig:
+    """Serving-layer knobs (engine knobs live in EngineConfig)."""
+
+    max_batch: int = 16            # flush threshold / largest micro-batch
+    max_wait_s: float = 0.002      # oldest request's max queue wait
+    # Query-count pads: a flushed group of n requests runs at the smallest
+    # bucket ≥ n. Must cover max_batch.
+    q_buckets: tuple[int, ...] = (1, 4, 16, 64)
+    # Pattern-count pads; None derives powers-of-two from observed queries.
+    t_buckets: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        assert self.max_batch <= max(self.q_buckets), (
+            "q_buckets must cover max_batch")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedResult:
+    """Per-request view of one lane of a batched EngineResult."""
+
+    keys: np.ndarray       # (k,) int32
+    scores: np.ndarray     # (k,) f32
+    n_pulled: int
+    n_answers: int
+    n_iters: int
+    n_wasted: int          # lockstep trips this lane sat frozen
+    relax_mask: np.ndarray  # (T, R) for the request's true T
+    batch_size: int        # real requests in the micro-batch served with
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """One record per executed micro-batch (benchmark/report fodder)."""
+
+    n_requests: int        # real requests
+    q_bucket: int
+    t_bucket: int
+    exec_s: float          # execute-phase wall time (plan_s separate)
+    n_iters: int           # batch lockstep trips (max over lanes)
+    useful_iters: int      # sum over real lanes of per-lane n_iters
+    wasted_iters: int      # sum over real lanes of per-lane n_wasted
+    plan_s: float = 0.0    # plan-phase wall time attributed to this batch
+
+
+class BatchExecutor:
+    """Synchronous bucketed batch execution against one store.
+
+    Pads queries into shape buckets, runs ``engine.run_query_batch`` per
+    bucket, unpads per-request results. The jit cache is keyed by the
+    bucketed ``(Q, T)`` shapes, so ``warmup()`` can pre-compile the whole
+    bucket grid before traffic hits.
+    """
+
+    def __init__(self, store, relax, cfg: EngineConfig, mode: str = "specqp",
+                 bcfg: BatchingConfig = BatchingConfig()):
+        self.store = store
+        self.relax = relax
+        self.cfg = cfg
+        self.mode = mode
+        self.bcfg = bcfg
+        # Recent-batch records, bounded so a long-lived server does not
+        # grow without bound; aggregate metrics use the running totals
+        # below, which cover every batch ever served since reset_stats().
+        self.stats: list[BatchStats] = []
+        self.stats_cap = 4096
+        self.plan_total_s = 0.0   # plan-phase wall time (offline pipeline)
+        self._useful_total = 0
+        self._wasted_total = 0
+        # Host-side copies for the work scheduler (batch composition).
+        self._lengths = np.asarray(store.lengths)
+        self._rel_ids = np.asarray(relax.ids)
+
+    def reset_stats(self) -> None:
+        self.stats.clear()
+        self.plan_total_s = 0.0
+        self._useful_total = 0
+        self._wasted_total = 0
+
+    def _t_bucket(self, t: int) -> int:
+        if self.bcfg.t_buckets is not None:
+            return bucket_for(t, self.bcfg.t_buckets)
+        return bucket_for(t, default_t_buckets(max(t, 2)))
+
+    @staticmethod
+    def _true_t(q: np.ndarray) -> int:
+        q = np.asarray(q)
+        return int((q != int(PAD_KEY)).sum())
+
+    def _pad_group(self, group: list[np.ndarray], t_b: int,
+                   q_b: int) -> jax.Array:
+        batch = np.full((q_b, t_b), int(PAD_KEY), np.int32)
+        for i, q in enumerate(group):
+            q = np.asarray(q, np.int32)
+            q = q[q != int(PAD_KEY)]
+            batch[i, :len(q)] = q
+        return jnp.asarray(batch)
+
+    def warmup(self, t_buckets: tuple[int, ...] | None = None) -> int:
+        """Compile every (q_bucket, t_bucket) specialization; returns count.
+
+        The dummy batches are all-pad queries — one executor trip each, so
+        warmup cost is compile-dominated, not execute-dominated. Both phases
+        (plan, execute-with-masks) are compiled per shape.
+        """
+        t_buckets = t_buckets or self.bcfg.t_buckets
+        assert t_buckets, "warmup needs explicit or configured t_buckets"
+        q_cover = bucket_for(self.bcfg.max_batch, self.bcfg.q_buckets)
+        n = 0
+        for t_b in t_buckets:
+            for q_b in self.bcfg.q_buckets:
+                if q_b > q_cover:
+                    continue
+                dummy = jnp.full((q_b, t_b), PAD_KEY, jnp.int32)
+                masks = engine.plan_query_batch(
+                    self.store, self.relax, dummy, self.cfg, self.mode)
+                jax.block_until_ready(engine.run_query_batch_with_masks(
+                    self.store, self.relax, dummy, masks, self.cfg).scores)
+                n += 1
+        return n
+
+    def plan_group(self, group: list[np.ndarray]
+                   ) -> tuple[list[np.ndarray], float]:
+        """Plan phase: (T, R) masks per request (batched, bucket shapes)."""
+        t_b = self._t_bucket(max(self._true_t(q) for q in group))
+        q_b = bucket_for(len(group), self.bcfg.q_buckets)
+        batch = self._pad_group(group, t_b, q_b)
+        t0 = time.perf_counter()
+        masks = engine.plan_query_batch(self.store, self.relax, batch,
+                                        self.cfg, self.mode)
+        masks = np.asarray(masks)
+        dt = time.perf_counter() - t0
+        self.plan_total_s += dt
+        return [masks[i] for i in range(len(group))], dt
+
+    def planned_work(self, q: np.ndarray, mask: np.ndarray) -> int:
+        """Pullable items under the plan: lengths of the enabled sources."""
+        t = np.asarray(q)
+        t = t[t != int(PAD_KEY)]
+        rel = self._rel_ids[t]                          # (T, R)
+        on = mask[:len(t)] & (rel >= 0)
+        return int(self._lengths[t].sum() +
+                   self._lengths[np.where(rel >= 0, rel, 0)][on].sum())
+
+    def run_batch(self, group: list[np.ndarray],
+                  masks: list[np.ndarray] | None = None
+                  ) -> list[ServedResult]:
+        """Serve one micro-batch of same-T-bucket queries (≤ max_batch).
+
+        ``masks`` — precomputed plans from ``plan_group`` (the offline
+        scheduler plans ahead to compose batches by planned work); when
+        None, the plan phase runs here on the same padded batch. Either
+        way results are identical to per-query ``run_query``.
+        """
+        assert 0 < len(group) <= self.bcfg.max_batch
+        t_b = self._t_bucket(max(self._true_t(q) for q in group))
+        q_b = bucket_for(len(group), self.bcfg.q_buckets)
+        batch = self._pad_group(group, t_b, q_b)
+        plan_s = 0.0
+        if masks is None:
+            t0 = time.perf_counter()
+            mask_b = engine.plan_query_batch(self.store, self.relax, batch,
+                                             self.cfg, self.mode)
+            plan_s = time.perf_counter() - t0
+        else:
+            R = self._rel_ids.shape[1]
+            mask_b = np.zeros((q_b, t_b, R), bool)
+            for i, m in enumerate(masks):
+                # Rows past a query's true T are all-False padding, so
+                # trimming to this batch's t_b is lossless.
+                mask_b[i, :min(m.shape[0], t_b)] = m[:t_b]
+            mask_b = jnp.asarray(mask_b)
+        t0 = time.perf_counter()
+        res = engine.run_query_batch_with_masks(self.store, self.relax,
+                                                batch, mask_b, self.cfg)
+        jax.block_until_ready(res.scores)
+        dt = time.perf_counter() - t0
+
+        keys = np.asarray(res.keys)
+        scores = np.asarray(res.scores)
+        mask = np.asarray(res.relax_mask)
+        n_pulled = np.asarray(res.n_pulled)
+        n_answers = np.asarray(res.n_answers)
+        n_iters = np.asarray(res.n_iters)
+        n_wasted = np.asarray(res.n_wasted)
+        out = [ServedResult(
+            keys=keys[i], scores=scores[i],
+            n_pulled=int(n_pulled[i]), n_answers=int(n_answers[i]),
+            n_iters=int(n_iters[i]), n_wasted=int(n_wasted[i]),
+            relax_mask=mask[i, :self._true_t(q)],
+            batch_size=len(group)) for i, q in enumerate(group)]
+        useful = int(n_iters[:len(group)].sum())
+        wasted = int(n_wasted[:len(group)].sum())
+        self._useful_total += useful
+        self._wasted_total += wasted
+        self.stats.append(BatchStats(
+            n_requests=len(group), q_bucket=q_b, t_bucket=t_b, exec_s=dt,
+            n_iters=int(n_iters.max()), useful_iters=useful,
+            wasted_iters=wasted, plan_s=plan_s))
+        if len(self.stats) > self.stats_cap:
+            del self.stats[:-self.stats_cap]
+        return out
+
+    def run(self, queries: list[np.ndarray]) -> list[ServedResult]:
+        """Serve a request list offline: plan → schedule → execute.
+
+        Per T bucket: the plan phase runs batched over arrival order (the
+        planner vectorizes across lanes and has no lockstep loop, so batch
+        composition is irrelevant there); then micro-batches are composed
+        by *planned work* — the pullable source lengths each plan enabled —
+        so lanes sharing a lockstep loop finish at similar trip counts (a
+        heavy query mixed into a light batch makes every light lane burn
+        frozen trips); finally the execute phase runs per micro-batch with
+        the precomputed masks. Order of results matches ``queries``.
+        """
+        by_bucket: dict[int, list[int]] = {}
+        for i, q in enumerate(queries):
+            by_bucket.setdefault(self._t_bucket(self._true_t(q)), []).append(i)
+        out: list[ServedResult | None] = [None] * len(queries)
+        for _, idxs in sorted(by_bucket.items()):
+            masks: dict[int, np.ndarray] = {}
+            chunk_cap = bucket_for(self.bcfg.max_batch, self.bcfg.q_buckets)
+            for c in range(0, len(idxs), chunk_cap):
+                chunk = idxs[c:c + chunk_cap]
+                ms, _ = self.plan_group([queries[j] for j in chunk])
+                masks.update(zip(chunk, ms))
+            idxs = sorted(idxs, key=lambda j: self.planned_work(
+                queries[j], masks[j]))
+            for c in range(0, len(idxs), self.bcfg.max_batch):
+                chunk = idxs[c:c + self.bcfg.max_batch]
+                rs = self.run_batch([queries[j] for j in chunk],
+                                    masks=[masks[j] for j in chunk])
+                for j, r in zip(chunk, rs):
+                    out[j] = r
+        return out  # type: ignore[return-value]
+
+    def wasted_fraction(self) -> float:
+        """Fraction of real-lane lockstep trips spent frozen, since the
+        last ``reset_stats()`` (running totals — O(1), unbounded window)."""
+        return self._wasted_total / max(
+            self._useful_total + self._wasted_total, 1)
+
+
+class MicroBatcher:
+    """Threaded request queue in front of a BatchExecutor.
+
+    ``submit`` returns a Future resolving to a ServedResult. A worker
+    thread flushes a micro-batch when ``max_batch`` requests are queued or
+    the oldest has waited ``max_wait_s``. Flushed requests are grouped by
+    T bucket (one executor call per group) so shape specializations are
+    reused. Use as a context manager, or call ``close()``.
+    """
+
+    _STOP = object()
+
+    def __init__(self, executor: BatchExecutor):
+        self.executor = executor
+        self._q: queue.Queue = queue.Queue()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, query: np.ndarray) -> Future:
+        fut: Future = Future()
+        self._q.put((np.asarray(query, np.int32), fut))
+        return fut
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self):
+        self._q.put(self._STOP)
+        self._thread.join()
+
+    def _loop(self):
+        bcfg = self.executor.bcfg
+        while True:
+            item = self._q.get()
+            if item is self._STOP:
+                return
+            pending = [item]
+            deadline = time.perf_counter() + bcfg.max_wait_s
+            while len(pending) < bcfg.max_batch:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=left)
+                except queue.Empty:
+                    break
+                if nxt is self._STOP:
+                    self._flush(pending)
+                    return
+                pending.append(nxt)
+            self._flush(pending)
+
+    def _flush(self, pending):
+        """Serve one flush group. Never raises: any error — bucketing a
+        malformed query as much as an executor failure — is routed to the
+        affected Futures so the worker thread survives and later submits
+        still resolve."""
+        if not pending:
+            return
+        by_bucket: dict[int, list[tuple[np.ndarray, Future]]] = {}
+        for q, fut in pending:
+            try:
+                t_b = self.executor._t_bucket(self.executor._true_t(q))
+            except Exception as e:  # noqa: BLE001 — fail the request only
+                fut.set_exception(e)
+                continue
+            by_bucket.setdefault(t_b, []).append((q, fut))
+        for _, items in sorted(by_bucket.items()):
+            try:
+                results = self.executor.run_batch([q for q, _ in items])
+                for (_, fut), r in zip(items, results):
+                    fut.set_result(r)
+            except Exception as e:  # noqa: BLE001 — fail the batch, not the server
+                for _, fut in items:
+                    if not fut.done():
+                        fut.set_exception(e)

@@ -1,10 +1,14 @@
-"""Serving launcher: batched KG query serving (the paper's workload kind).
+"""Serving launcher: micro-batched KG query serving (the paper's workload).
 
 ``python -m repro.launch.serve --dataset xkg_mini --mode specqp --k 10``
-loads (generates) a workload, answers every query with the requested
-engine, and reports latency + the paper's efficiency counters. With more
-than one device the store is hash-partitioned and served through the
-distributed engine (same two-level merge the dry-run lowers at 512 chips).
+loads (generates) a workload and serves it through the micro-batching
+layer (``repro.launch.batching``): requests are queued, padded into shape
+buckets, answered by the batch-aware executor, and unpadded — reporting
+QPS + latency percentiles + the wasted-iteration fraction against the
+sequential one-query-at-a-time baseline. ``--arrival-qps`` replays the
+workload as a Poisson arrival process through the threaded MicroBatcher
+(latency then includes queue wait); the default is offline max-throughput
+mode. DESIGN.md §8 documents the layer.
 """
 from __future__ import annotations
 
@@ -18,6 +22,23 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core.types import EngineConfig
 from repro.data import kg_synth
+from repro.launch import batching
+
+
+def sequential_baseline(wl, cfg, mode, queries):
+    """One run_query per request (the pre-batching serving loop)."""
+    q0 = jnp.asarray(queries[0])
+    jax.block_until_ready(
+        engine.run_query(wl.store, wl.relax, q0, cfg, mode).scores)
+    lat = []
+    t_start = time.perf_counter()
+    for q in queries:
+        t0 = time.perf_counter()
+        res = engine.run_query(wl.store, wl.relax, jnp.asarray(q), cfg, mode)
+        jax.block_until_ready(res.scores)
+        lat.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t_start
+    return wall, np.asarray(lat)
 
 
 def main():
@@ -25,32 +46,84 @@ def main():
     ap.add_argument("--dataset", default="xkg_mini",
                     choices=["xkg_mini", "twitter_mini"])
     ap.add_argument("--mode", default="specqp",
-                    choices=["specqp", "trinit", "join_only"])
+                    choices=["specqp", "specqp_pattern", "trinit",
+                             "join_only"])
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--grid-bins", type=int, default=256)
     ap.add_argument("--list-len", type=int, default=512)
     ap.add_argument("--n-queries", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--arrival-qps", type=float, default=None,
+                    help="replay as a Poisson arrival process through the "
+                         "threaded MicroBatcher (default: offline batches)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     wl = kg_synth.make_workload(args.dataset, list_len=args.list_len,
-                                n_queries=args.n_queries)
-    cfg = EngineConfig(block=args.block, k=args.k)
+                                n_queries=args.n_queries, seed=args.seed)
+    cfg = EngineConfig(block=args.block, k=args.k,
+                       grid_bins=args.grid_bins)
+    queries = [np.asarray(q) for q in wl.queries]
+    t_set = sorted({int((q >= 0).sum()) for q in queries})
 
-    lat, pulled, answers = [], [], []
-    for i in range(len(wl.queries)):
-        q = jnp.asarray(wl.queries[i])
-        t0 = time.time()
-        res = engine.run_query(wl.store, wl.relax, q, cfg, args.mode)
-        jax.block_until_ready(res.scores)
-        lat.append(time.time() - t0)
-        pulled.append(int(res.n_pulled))
-        answers.append(int(res.n_answers))
-    lat_ms = np.array(lat[2:]) * 1e3   # drop warmup/compile
+    q_buckets = tuple(sorted({b for b in (1, 4, 16, 64)
+                              if b <= args.max_batch} | {args.max_batch}))
+    bcfg = batching.BatchingConfig(
+        max_batch=args.max_batch, max_wait_s=args.max_wait_ms * 1e-3,
+        q_buckets=q_buckets, t_buckets=tuple(t_set))
+    ex = batching.BatchExecutor(wl.store, wl.relax, cfg, args.mode, bcfg)
+    n_compiled = ex.warmup()
     print(f"{args.dataset} mode={args.mode} k={args.k}: "
-          f"{len(wl.queries)} queries | p50 {np.percentile(lat_ms,50):.1f}ms "
-          f"p99 {np.percentile(lat_ms,99):.1f}ms | "
-          f"mean pulled {np.mean(pulled):.0f} "
-          f"mean answer-objects {np.mean(answers):.0f}")
+          f"{len(queries)} queries | warmed {n_compiled} "
+          f"(q_bucket × t_bucket) jit specializations "
+          f"q={bcfg.q_buckets} t={bcfg.t_buckets}")
+
+    seq_wall, seq_lat = sequential_baseline(wl, cfg, args.mode, queries)
+    print(f"  sequential: {len(queries) / seq_wall:7.1f} QPS | "
+          f"p50 {np.percentile(seq_lat, 50) * 1e3:6.1f}ms "
+          f"p99 {np.percentile(seq_lat, 99) * 1e3:6.1f}ms")
+
+    if args.arrival_qps:
+        rng = np.random.default_rng(args.seed)
+        gaps = rng.exponential(1.0 / args.arrival_qps, size=len(queries))
+        # Latency = submit → future resolution (recorded by a done
+        # callback in the worker thread, not when the collection loop
+        # happens to reach the future).
+        done_t = np.zeros(len(queries))
+
+        def _mark(i):
+            return lambda _f: done_t.__setitem__(i, time.perf_counter())
+
+        with batching.MicroBatcher(ex) as mb:
+            futs, t_sub = [], []
+            t_start = time.perf_counter()
+            for i, (q, gap) in enumerate(zip(queries, gaps)):
+                time.sleep(gap)
+                t_sub.append(time.perf_counter())
+                f = mb.submit(q)
+                f.add_done_callback(_mark(i))
+                futs.append(f)
+            for f in futs:
+                f.result()
+            wall = time.perf_counter() - t_start
+        lat = done_t - np.asarray(t_sub)
+        label = f"online λ={args.arrival_qps:g}/s"
+    else:
+        t_start = time.perf_counter()
+        ex.run(queries)
+        wall = time.perf_counter() - t_start
+        # Offline latency = completion time of the request's micro-batch.
+        lat = np.asarray([s.exec_s for s in ex.stats
+                          for _ in range(s.n_requests)])
+        label = "batched    "
+    mean_b = np.mean([s.n_requests for s in ex.stats]) if ex.stats else 0
+    print(f"  {label}: {len(queries) / wall:7.1f} QPS | "
+          f"p50 {np.percentile(lat, 50) * 1e3:6.1f}ms "
+          f"p99 {np.percentile(lat, 99) * 1e3:6.1f}ms | "
+          f"speedup {seq_wall / wall:4.2f}x | mean batch {mean_b:.1f} | "
+          f"wasted-iter frac {ex.wasted_fraction():.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,190 @@
+"""Serving layer: batched-vs-sequential equivalence, buckets, micro-batching.
+
+The correctness contract of the whole serving subsystem (DESIGN.md §8) is
+that batching is a *pure throughput transform*: per-request top-k keys and
+scores are element-wise identical to per-query ``engine.run_query``, across
+engine modes, ragged batches (T-bucket padding), batch-size padding lanes,
+and the threaded micro-batcher.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import small_workload, TEST_GRID_BINS
+from repro.core import engine
+from repro.core.types import EngineConfig, PAD_KEY
+from repro.launch import batching
+
+CFG = EngineConfig(block=16, k=5, grid_bins=TEST_GRID_BINS)
+MODES = ("trinit", "specqp", "specqp_pattern", "join_only")
+
+
+def _singles(wl, idxs, mode):
+    return [engine.run_query(wl.store, wl.relax, jnp.asarray(wl.queries[i]),
+                             CFG, mode) for i in idxs]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_batch_equals_single_exactly(mode):
+    """run_query_batch == per-query run_query, element-wise, every mode."""
+    wl = small_workload(seed=0, n_queries=8)
+    qs = jnp.asarray(wl.queries)          # ragged Ts, -1 padded rows
+    batch = engine.run_query_batch(wl.store, wl.relax, qs, CFG, mode)
+    for i, single in enumerate(_singles(wl, range(len(wl.queries)), mode)):
+        np.testing.assert_array_equal(np.asarray(batch.keys[i]),
+                                      np.asarray(single.keys))
+        np.testing.assert_array_equal(np.asarray(batch.scores[i]),
+                                      np.asarray(single.scores))
+        # Early-exit lanes: frozen counters equal the single-query run's.
+        assert int(batch.n_iters[i]) == int(single.n_iters)
+        assert int(batch.n_pulled[i]) == int(single.n_pulled)
+        assert int(batch.n_answers[i]) == int(single.n_answers)
+
+
+def test_lockstep_accounting():
+    """Every lane's useful + wasted trips equal the batch's trip count."""
+    wl = small_workload(seed=1, n_queries=8)
+    qs = jnp.asarray(wl.queries)
+    batch = engine.run_query_batch(wl.store, wl.relax, qs, CFG, "specqp")
+    it = np.asarray(batch.n_iters)
+    w = np.asarray(batch.n_wasted)
+    total = it + w
+    assert (total == total[0]).all()
+    assert int(total[0]) == int(it.max())
+    # The slowest lane never waits.
+    assert w[int(np.argmax(it))] == 0
+
+
+def test_pad_lanes_are_inert():
+    """All-PAD batch lanes finish on their first trip and return no keys."""
+    wl = small_workload(seed=0, n_queries=4)
+    qs = np.asarray(wl.queries[:2])
+    padded = np.concatenate(
+        [qs, np.full((2, qs.shape[1]), int(PAD_KEY), np.int32)])
+    batch = engine.run_query_batch(wl.store, wl.relax, jnp.asarray(padded),
+                                   CFG, "specqp")
+    ref = engine.run_query_batch(wl.store, wl.relax, jnp.asarray(qs),
+                                 CFG, "specqp")
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(batch.keys[i]),
+                                      np.asarray(ref.keys[i]))
+        np.testing.assert_array_equal(np.asarray(batch.scores[i]),
+                                      np.asarray(ref.scores[i]))
+    for i in (2, 3):
+        assert (np.asarray(batch.keys[i]) == int(PAD_KEY)).all()
+        assert int(batch.n_iters[i]) == 1
+        assert int(batch.n_pulled[i]) == 0
+
+
+def test_plan_then_execute_equals_fused():
+    """plan_query_batch + run_query_batch_with_masks == run_query_batch."""
+    wl = small_workload(seed=2, n_queries=6)
+    qs = jnp.asarray(wl.queries[:4])
+    fused = engine.run_query_batch(wl.store, wl.relax, qs, CFG, "specqp")
+    masks = engine.plan_query_batch(wl.store, wl.relax, qs, CFG, "specqp")
+    split = engine.run_query_batch_with_masks(wl.store, wl.relax, qs,
+                                              masks, CFG)
+    np.testing.assert_array_equal(np.asarray(fused.keys),
+                                  np.asarray(split.keys))
+    np.testing.assert_array_equal(np.asarray(fused.scores),
+                                  np.asarray(split.scores))
+    np.testing.assert_array_equal(np.asarray(fused.relax_mask),
+                                  np.asarray(split.relax_mask))
+
+
+def _executor(wl, mode="specqp", max_batch=4):
+    bcfg = batching.BatchingConfig(max_batch=max_batch, max_wait_s=0.01,
+                                   q_buckets=(1, 4), t_buckets=(2, 3))
+    return batching.BatchExecutor(wl.store, wl.relax, CFG, mode, bcfg)
+
+
+@pytest.mark.parametrize("mode", ("specqp", "trinit"))
+def test_offline_executor_equivalence(mode):
+    """BatchExecutor.run (bucketing, padding, plan-ahead scheduling) is
+    element-wise identical to the sequential loop — including a ragged
+    request count that forces a partially-padded q bucket."""
+    wl = small_workload(seed=0, n_queries=10)
+    queries = [np.asarray(q) for q in wl.queries]   # 10 = 2×4 + a 2-pad
+    ex = _executor(wl, mode)
+    results = ex.run(queries)
+    singles = _singles(wl, range(len(queries)), mode)
+    for i, (r, s) in enumerate(zip(results, singles)):
+        np.testing.assert_array_equal(r.keys, np.asarray(s.keys),
+                                      err_msg=f"query {i}")
+        np.testing.assert_array_equal(r.scores, np.asarray(s.scores))
+        assert r.n_iters == int(s.n_iters)
+        assert r.n_pulled == int(s.n_pulled)
+        T = int((queries[i] != int(PAD_KEY)).sum())
+        np.testing.assert_array_equal(
+            r.relax_mask, np.asarray(s.relax_mask)[:T])
+    assert ex.stats, "executor recorded no batch stats"
+    assert sum(s.n_requests for s in ex.stats) == len(queries)
+    assert 0.0 <= ex.wasted_fraction() < 1.0
+
+
+@settings(max_examples=5)
+@given(seed=st.integers(min_value=0, max_value=3),
+       n=st.integers(min_value=1, max_value=7),
+       mode=st.sampled_from(("specqp", "join_only")))
+def test_offline_executor_equivalence_property(seed, n, mode):
+    """Random request subsets through the bucketed pipeline == per-query."""
+    wl = small_workload(seed=0, n_queries=8)
+    rng = np.random.default_rng(seed)
+    idxs = rng.choice(len(wl.queries), size=n, replace=True)
+    queries = [np.asarray(wl.queries[i]) for i in idxs]
+    ex = _executor(wl, mode)
+    results = ex.run(queries)
+    for r, i in zip(results, idxs):
+        s = engine.run_query(wl.store, wl.relax, jnp.asarray(wl.queries[i]),
+                             CFG, mode)
+        np.testing.assert_array_equal(r.keys, np.asarray(s.keys))
+        np.testing.assert_array_equal(r.scores, np.asarray(s.scores))
+
+
+def test_microbatcher_threaded_equivalence():
+    """Futures from the threaded queue resolve to per-query results."""
+    wl = small_workload(seed=0, n_queries=8)
+    queries = [np.asarray(q) for q in wl.queries]
+    ex = _executor(wl, "specqp")
+    with batching.MicroBatcher(ex) as mb:
+        futs = [mb.submit(q) for q in queries]
+        results = [f.result(timeout=120) for f in futs]
+    singles = _singles(wl, range(len(queries)), "specqp")
+    for r, s in zip(results, singles):
+        np.testing.assert_array_equal(r.keys, np.asarray(s.keys))
+        np.testing.assert_array_equal(r.scores, np.asarray(s.scores))
+
+
+def test_microbatcher_survives_bad_request():
+    """A query exceeding the largest T bucket fails ITS future with the
+    bucketing error; the worker thread survives and later submits still
+    resolve (regression: an escaping exception used to kill the loop and
+    strand every pending future)."""
+    wl = small_workload(seed=0, n_queries=4)
+    ex = _executor(wl, "join_only")       # t_buckets=(2, 3)
+    good = np.asarray(wl.queries[0])
+    too_wide = np.arange(5, dtype=np.int32)   # T=5 > max bucket 3
+    with batching.MicroBatcher(ex) as mb:
+        bad_fut = mb.submit(too_wide)
+        with pytest.raises(ValueError):
+            bad_fut.result(timeout=120)
+        ok_fut = mb.submit(good)
+        r = ok_fut.result(timeout=120)
+    s = engine.run_query(wl.store, wl.relax, jnp.asarray(good), CFG,
+                         "join_only")
+    np.testing.assert_array_equal(r.keys, np.asarray(s.keys))
+
+
+def test_bucket_helpers():
+    assert batching.bucket_for(1, (1, 4, 16)) == 1
+    assert batching.bucket_for(5, (1, 4, 16)) == 16
+    with pytest.raises(ValueError):
+        batching.bucket_for(17, (1, 4, 16))
+    assert batching.default_t_buckets(4) == (2, 4)
+    assert batching.default_t_buckets(2) == (2,)
+    # Derived buckets are a power-of-two cover, never t verbatim — with
+    # t_buckets=None, distinct Ts must share buckets or every pattern
+    # count becomes its own jit specialization.
+    assert batching.default_t_buckets(7) == (2, 4, 8)
+    assert batching.default_t_buckets(9) == (2, 4, 8, 16)

@@ -31,8 +31,10 @@ def _random_overlapping_lists(rng, n_sets, n_entities, shared, own_max):
 
 def test_sketch_shapes_and_determinism():
     store = _store_from([([1, 2, 3], [3, 2, 1]), ([4, 5], [2, 1])])
+    # Width is sized adaptively from the ingest's longest list (3 keys →
+    # the MIN_WORDS floor for this tiny store).
     assert store.sketch.shape == (2, sketches.SKETCH_LANES,
-                                  sketches.SKETCH_WORDS)
+                                  sketches.adaptive_words(3))
     assert store.sketch.dtype == jnp.uint32
     store2 = _store_from([([1, 2, 3], [3, 2, 1]), ([4, 5], [2, 1])])
     np.testing.assert_array_equal(np.asarray(store.sketch),
@@ -40,6 +42,40 @@ def test_sketch_shapes_and_determinism():
     # An empty pattern has an all-zero signature.
     store3 = _store_from([([], [])])
     assert int(np.asarray(store3.sketch).sum()) == 0
+
+
+def test_adaptive_words_sizing():
+    """W = 2·Lmax pow2-rounded, clamped; fixed default preserved at L=512."""
+    assert sketches.adaptive_words(1) == sketches.MIN_WORDS
+    assert sketches.adaptive_words(48) == sketches.MIN_WORDS
+    # Continuity with the historical fixed default at benchmark scale.
+    assert sketches.adaptive_words(512) == sketches.SKETCH_WORDS == 1024
+    # The ROADMAP saturation regime: ≫ 2k keys/lane now widens the sketch.
+    assert sketches.adaptive_words(8192) == 16384
+    assert sketches.adaptive_words(10**7) == sketches.MAX_WORDS
+    # Monotone and power-of-two.
+    prev = 0
+    for L in (1, 10, 100, 1000, 5000, 50_000):
+        w = sketches.adaptive_words(L)
+        assert w >= prev and (w & (w - 1)) == 0
+        prev = w
+
+
+def test_fixed_width_override_and_shard_geometry():
+    """Explicit sketch_words pins geometry; shard stores share one W."""
+    lists = [(np.arange(100, dtype=np.int32),
+              np.random.default_rng(0).random(100) + 0.1),
+             (np.arange(50, 80, dtype=np.int32),
+              np.random.default_rng(1).random(30) + 0.1)]
+    store = kg.build_store(lists, sketch_words=256)
+    assert store.sketch.shape[-1] == 256
+    # Sharded build: geometry comes from the GLOBAL longest list, uniform
+    # across shards (stacking + psum require it).
+    from repro.core import distributed
+    skg = distributed.build_sharded_kg(
+        lists, kg.build_relax_table(2, {0: [(1, 0.5)]}), n_shards=2)
+    assert skg.stores.sketch.shape[2:] == (
+        sketches.SKETCH_LANES, sketches.adaptive_words(100))
 
 
 @settings(max_examples=15)
