@@ -1,9 +1,11 @@
 """Benchmark entry point: one function per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast]`` prints
-``name,us_per_call,derived`` CSV rows plus the markdown report, and appends
-the report to results/paper_report.md. Roofline rows (if dry-run results
-exist) are summarized at the end.
+``name,us_per_call,derived`` CSV rows plus the markdown report, appends
+the report to results/paper_report.md, and appends the CSV rows (with a
+run-stamp header) to results/benchmark_rows.csv so the CI artifact
+carries the machine-readable history too. Roofline rows (if dry-run
+results exist) are summarized at the end.
 """
 from __future__ import annotations
 
@@ -24,11 +26,18 @@ def main() -> None:
     from benchmarks import paper_tables
 
     t0 = time.time()
-    report, results, plan_rows, serve_rows = paper_tables.run_all(
-        fast=args.fast)
+    report, results, plan_rows, serve_rows, refill_rows = \
+        paper_tables.run_all(fast=args.fast)
     dt = time.time() - t0
 
-    # CSV contract: name,us_per_call,derived
+    # CSV contract: name,us_per_call,derived. Rows are printed AND kept
+    # for results/benchmark_rows.csv (the CI artifact).
+    csv_rows: list[str] = []
+
+    def emit(line: str) -> None:
+        csv_rows.append(line)
+        print(line)
+
     print("name,us_per_call,derived")
     for ds, res in results.items():
         for k, rows in res.items():
@@ -37,43 +46,55 @@ def main() -> None:
             prec = np.mean([r["prec"] for r in rows])
             pull_ratio = (np.mean([r["pulled_t"] for r in rows]) /
                           max(np.mean([r["pulled_s"] for r in rows]), 1))
-            print(f"table2_precision_{ds}_k{k},{t_sp:.0f},{prec:.3f}")
-            print(f"fig6_runtime_trinit_{ds}_k{k},{t_tr:.0f},1.0")
-            print(f"fig6_runtime_specqp_{ds}_k{k},{t_sp:.0f},"
+            emit(f"table2_precision_{ds}_k{k},{t_sp:.0f},{prec:.3f}")
+            emit(f"fig6_runtime_trinit_{ds}_k{k},{t_tr:.0f},1.0")
+            emit(f"fig6_runtime_specqp_{ds}_k{k},{t_sp:.0f},"
                   f"{t_tr/max(t_sp,1e-9):.2f}")
-            print(f"fig6_pull_ratio_{ds}_k{k},{t_sp:.0f},{pull_ratio:.2f}")
+            emit(f"fig6_pull_ratio_{ds}_k{k},{t_sp:.0f},{pull_ratio:.2f}")
             # per-relaxation (T,R) plan vs the per-pattern ablation: mean
             # pulls of Spec-QP relative to the coarser plan (≤ 1.0 expected)
             pp = np.mean([r["pulled_pp"] for r in rows])
             sp = np.mean([r["pulled_s"] for r in rows])
-            print(f"fig6_perrelax_vs_pattern_pull_{ds}_k{k},{t_sp:.0f},"
+            emit(f"fig6_perrelax_vs_pattern_pull_{ds}_k{k},{t_sp:.0f},"
                   f"{sp / max(pp, 1):.3f}")
             prec_pp = np.mean([r["prec_pp"] for r in rows])
-            print(f"table2_precision_patternplan_{ds}_k{k},{t_sp:.0f},"
+            emit(f"table2_precision_patternplan_{ds}_k{k},{t_sp:.0f},"
                   f"{prec_pp:.3f}")
             acc_rows = [r for r in rows]
             exact = np.mean([r["plan_exact"] for r in acc_rows])
-            print(f"table3_prediction_{ds}_k{k},{t_sp:.0f},{exact:.3f}")
+            emit(f"table3_prediction_{ds}_k{k},{t_sp:.0f},{exact:.3f}")
             err = np.mean([r["err_mean"] for r in rows])
-            print(f"table4_score_err_{ds}_k{k},{t_sp:.0f},{err:.4f}")
+            emit(f"table4_score_err_{ds}_k{k},{t_sp:.0f},{err:.4f}")
     for r in plan_rows:
         # derived = plan-time share of execute-time (flat in L for sketch).
-        print(f"plan_cost_exact_L{r['L']},{r['plan_exact']*1e6:.0f},"
+        emit(f"plan_cost_exact_L{r['L']},{r['plan_exact']*1e6:.0f},"
               f"{r['plan_exact']/max(r['exec'],1e-9):.3f}")
-        print(f"plan_cost_sketch_L{r['L']},{r['plan_sketch']*1e6:.0f},"
+        emit(f"plan_cost_sketch_L{r['L']},{r['plan_sketch']*1e6:.0f},"
               f"{r['plan_sketch']/max(r['exec'],1e-9):.3f}")
-        print(f"plan_mask_agreement_L{r['L']},{r['plan_sketch']*1e6:.0f},"
+        emit(f"plan_mask_agreement_L{r['L']},{r['plan_sketch']*1e6:.0f},"
               f"{r['agree']:.3f}")
     for r in serve_rows:
         # us_per_call = per-request p50 latency; derived varies per row.
         tag = "seq" if r["batch"] == 0 else f"b{r['batch']}"
-        print(f"serving_qps_{tag},{r['p50']*1e6:.0f},{r['qps']:.1f}")
-        print(f"serving_p99_{tag},{r['p99']*1e6:.0f},{r['p99']*1e3:.2f}")
-        print(f"serving_speedup_{tag},{r['p50']*1e6:.0f},"
+        emit(f"serving_qps_{tag},{r['p50']*1e6:.0f},{r['qps']:.1f}")
+        emit(f"serving_p99_{tag},{r['p99']*1e6:.0f},{r['p99']*1e3:.2f}")
+        emit(f"serving_speedup_{tag},{r['p50']*1e6:.0f},"
               f"{r['speedup']:.2f}")
-        print(f"serving_wasted_{tag},{r['p50']*1e6:.0f},{r['wasted']:.3f}")
-        print(f"serving_topk_match_{tag},{r['p50']*1e6:.0f},"
+        emit(f"serving_wasted_{tag},{r['p50']*1e6:.0f},{r['wasted']:.3f}")
+        emit(f"serving_topk_match_{tag},{r['p50']*1e6:.0f},"
               f"{r['match']:.3f}")
+    for r in refill_rows:
+        # Continuous-refill streaming vs fixed micro-batches (skewed
+        # stream); the acceptance metric is serving_refill_wasted_refill
+        # strictly below serving_refill_wasted_fixed.
+        tag = r["variant"]
+        emit(f"serving_refill_qps_{tag},{r['p50']*1e6:.0f},{r['qps']:.1f}")
+        emit(f"serving_refill_p99_{tag},{r['p99']*1e6:.0f},"
+             f"{r['p99']*1e3:.2f}")
+        emit(f"serving_refill_wasted_{tag},{r['p50']*1e6:.0f},"
+             f"{r['wasted']:.4f}")
+        emit(f"serving_refill_topk_match_{tag},{r['p50']*1e6:.0f},"
+             f"{r['match']:.3f}")
 
     print(report)
     os.makedirs("results", exist_ok=True)
@@ -83,6 +104,10 @@ def main() -> None:
     with open("results/paper_report.md", "a") as f:
         f.write(f"\n\n## Benchmark run {stamp} ({profile} profile)\n")
         f.write(report + f"\n\n(total bench time {dt:.0f}s)\n")
+    with open("results/benchmark_rows.csv", "a") as f:
+        f.write(f"# run {stamp} ({profile} profile)\n")
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(csv_rows) + "\n")
 
     # Roofline summary if dry-run results exist.
     try:

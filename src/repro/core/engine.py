@@ -240,6 +240,172 @@ def _execute_batch(streams: ops.MergedStreams,
     return final
 
 
+def _bsel(mask: jax.Array, new: jax.Array, old: jax.Array) -> jax.Array:
+    """Per-lane select: broadcast a (Q,) lane mask against (Q, ...) leaves."""
+    return jnp.where(mask.reshape(mask.shape + (1,) * (new.ndim - 1)),
+                     new, old)
+
+
+def _splice_lanes(st: _LoopState, streams: ops.MergedStreams,
+                  fresh: ops.MergedStreams, refill: jax.Array
+                  ) -> tuple[_LoopState, ops.MergedStreams]:
+    """Splice freshly admitted queries into finished lanes, in place.
+
+    ``refill`` is a (Q,) lane mask; ``st``/``streams`` carry a leading
+    (Q,) lane axis. For masked lanes EVERY field of the lane's _LoopState
+    slice is reset to its ``_init_state`` value and the lane's streams are
+    replaced by ``fresh``'s slice; unmasked lanes are untouched. Resetting
+    the whole slice — cursors, seen rings, seen counter, top-k, every
+    counter — is what makes lane recycling leak-proof: the new query can
+    never probe a key the previous occupant pulled (or half-evicted), and
+    its counters equal a from-scratch ``run_query``. jit-safe by
+    construction: the splice is pure ``jnp.where`` selects over fixed-shape
+    arrays, so the while-loop carry keeps one static shape regardless of
+    which (traced) lanes refill.
+    """
+    Q, T, R1 = st.cursors.shape
+    N = st.seen_keys.shape[2]
+    k = st.top_keys.shape[1]
+    init = jax.vmap(lambda _: _init_state(T, R1, N, k))(jnp.arange(Q))
+    new_st = jax.tree_util.tree_map(
+        lambda i, o: _bsel(refill, i, o), init, st)
+    new_streams = jax.tree_util.tree_map(
+        lambda f, o: _bsel(refill, f, o), fresh, streams)
+    return new_st, new_streams
+
+
+class _RefillCarry(NamedTuple):
+    st: _LoopState               # per-lane loop state, leading (lanes,)
+    streams: ops.MergedStreams   # per-lane streams, leading (lanes,)
+    qidx: jax.Array              # (lanes,) queue entry each lane serves
+                                 # (M = never held one)
+    next_idx: jax.Array          # () next unadmitted queue entry
+    out_keys: jax.Array          # (M, k)
+    out_scores: jax.Array        # (M, k)
+    out_pulled: jax.Array        # (M,)
+    out_answers: jax.Array       # (M,)
+    out_iters: jax.Array         # (M,)
+    out_wasted: jax.Array        # (M,)
+    trips: jax.Array             # () total lockstep trips (safety guard)
+
+
+def _execute_refill(store: TripleStore, relax: RelaxTable,
+                    queue_pids: jax.Array, queue_masks: jax.Array,
+                    cfg: EngineConfig, lanes: int) -> _RefillCarry:
+    """Continuous-refill streaming executor (DESIGN.md §8).
+
+    The whole (M, T) query queue lives on device; ``lanes`` lanes run under
+    ONE ``lax.while_loop``. The moment a lane's HRJN bound closes (or its
+    iteration budget runs out) its result slice is scattered into the
+    output buffers at the lane's queue index, and the next unadmitted
+    query is spliced into the freed lane — streams re-gathered, the lane's
+    _LoopState slice fully re-initialised (``_splice_lanes``) — instead of
+    freezing the lane until the batch tail finishes. Lanes only idle once
+    the queue is drained, so the fixed-batch executor's per-batch tail
+    barrier becomes a single end-of-stream drain.
+
+    Per-query results are element-wise identical to ``run_query``: each
+    query runs the same ``_step`` sequence from the same fresh state; the
+    lane it happens to occupy is invisible to it. ``out_wasted`` follows
+    the drain: an idle lane's trips are attributed to the LAST query it
+    served (queries served mid-stream report 0), so the per-query sum is
+    the stream's total idle-lane trips — directly comparable to the
+    fixed-batch executor's frozen-lane total.
+    """
+    M, T = queue_pids.shape
+    R1 = relax.ids.shape[1] + 1
+    L = store.keys.shape[1]
+    N = _seen_size(R1, L, cfg)
+    max_iters = _max_iters(T, R1, L, cfg)
+    Q = lanes
+    trips_cap = M * max_iters + 2
+
+    def admit(i):
+        return ops.gather_streams(store, relax, queue_pids[i],
+                                  queue_masks[i])
+
+    lane0 = jnp.minimum(jnp.arange(Q), M - 1)
+    live0 = jnp.arange(Q) < M
+    st0 = jax.vmap(lambda _: _init_state(T, R1, N, cfg.k))(jnp.arange(Q))
+    carry0 = _RefillCarry(
+        st=st0._replace(done=~live0),
+        streams=jax.vmap(admit)(lane0),
+        qidx=jnp.where(live0, jnp.arange(Q), M).astype(jnp.int32),
+        next_idx=jnp.int32(min(Q, M)),
+        out_keys=jnp.full((M, cfg.k), PAD_KEY, jnp.int32),
+        out_scores=jnp.full((M, cfg.k), NEG_INF, jnp.float32),
+        out_pulled=jnp.zeros((M,), jnp.int32),
+        out_answers=jnp.zeros((M,), jnp.int32),
+        out_iters=jnp.zeros((M,), jnp.int32),
+        out_wasted=jnp.zeros((M,), jnp.int32),
+        trips=jnp.int32(0))
+
+    def lane_step(strm, s: _LoopState) -> _LoopState:
+        live = ~s.done
+        new = _step(strm, s, cfg, N, batched=True)
+        # Same freeze discipline as _execute_batch: only result-bearing
+        # fields of an idle lane are pinned; its merge state may mutate
+        # harmlessly (nothing reads it — a refill replaces it wholesale).
+        keep = lambda old, nw: jnp.where(live, nw, old)
+        return _LoopState(
+            cursors=new.cursors, seen_keys=new.seen_keys,
+            seen_scores=new.seen_scores, seen_cnt=new.seen_cnt,
+            top_keys=keep(s.top_keys, new.top_keys),
+            top_scores=keep(s.top_scores, new.top_scores),
+            n_pulled=keep(s.n_pulled, new.n_pulled),
+            n_answers=keep(s.n_answers, new.n_answers),
+            n_iters=keep(s.n_iters, new.n_iters),
+            n_wasted=s.n_wasted,
+            done=s.done | new.done | (new.n_iters >= max_iters))
+
+    def body(c: _RefillCarry) -> _RefillCarry:
+        live = ~c.st.done
+        st = jax.vmap(lane_step)(c.streams, c.st)
+
+        # Emit: scatter just-finished lanes' results at their queue index.
+        # Queue indices are unique per lane, so the row scatters never
+        # collide; index M (never-active lanes) drops.
+        finished = live & st.done
+        tgt = jnp.where(finished, c.qidx, M)
+        out_keys = c.out_keys.at[tgt].set(st.top_keys, mode="drop")
+        out_scores = c.out_scores.at[tgt].set(st.top_scores, mode="drop")
+        out_pulled = c.out_pulled.at[tgt].set(st.n_pulled, mode="drop")
+        out_answers = c.out_answers.at[tgt].set(st.n_answers, mode="drop")
+        out_iters = c.out_iters.at[tgt].set(st.n_iters, mode="drop")
+        out_wasted = c.out_wasted.at[
+            jnp.where(live, M, c.qidx)].add(1, mode="drop")
+
+        # Admit: the i-th finished lane (in lane order) takes queue entry
+        # next_idx + i while entries remain; later finishers go idle.
+        cand = c.next_idx + jnp.cumsum(finished.astype(jnp.int32)) - 1
+        refill = finished & (cand < M)
+
+        def do_refill(args):
+            st, streams, qidx = args
+            fresh = jax.vmap(admit)(jnp.clip(cand, 0, M - 1))
+            st2, streams2 = _splice_lanes(st, streams, fresh, refill)
+            return st2, streams2, jnp.where(refill, cand, qidx).astype(
+                jnp.int32)
+
+        # The cond skips the per-lane re-gather on the (common) trips
+        # where no lane finished.
+        st, streams, qidx = jax.lax.cond(
+            jnp.any(refill), do_refill, lambda args: args,
+            (st, c.streams, c.qidx))
+
+        return _RefillCarry(
+            st=st, streams=streams, qidx=qidx,
+            next_idx=c.next_idx + jnp.sum(refill).astype(jnp.int32),
+            out_keys=out_keys, out_scores=out_scores,
+            out_pulled=out_pulled, out_answers=out_answers,
+            out_iters=out_iters, out_wasted=out_wasted,
+            trips=c.trips + 1)
+
+    return jax.lax.while_loop(
+        lambda c: jnp.any(~c.st.done) & (c.trips < trips_cap),
+        body, carry0)
+
+
 def plan_for_mode(store: TripleStore, relax: RelaxTable,
                   pattern_ids: jax.Array, cfg: EngineConfig,
                   mode: str) -> jax.Array:
@@ -323,6 +489,42 @@ def run_query_batch(store, relax, pattern_ids_batch, cfg: EngineConfig,
     )(pattern_ids_batch)
     return run_query_batch_with_masks.__wrapped__(
         store, relax, pattern_ids_batch, masks, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg", "lanes"))
+def run_query_stream_with_masks(store, relax, pattern_ids_queue,
+                                masks: jax.Array, cfg: EngineConfig,
+                                lanes: int = 8) -> EngineResult:
+    """Serve an (M, T) query queue under precomputed (M, T, R) plans
+    through ``lanes`` continuous-refill device lanes (``_execute_refill``).
+
+    Results carry a leading (M,) axis in queue order. Top-k keys/scores
+    and the n_pulled/n_answers/n_iters counters are element-wise identical
+    to per-query ``run_query``; ``n_wasted`` is the drain accounting (idle
+    trips of the serving lane, attributed to its last query)."""
+    fin = _execute_refill(store, relax, pattern_ids_queue, masks, cfg,
+                          lanes)
+    return EngineResult(
+        keys=fin.out_keys, scores=fin.out_scores, n_pulled=fin.out_pulled,
+        n_answers=fin.out_answers, n_iters=fin.out_iters,
+        n_wasted=fin.out_wasted, relax_mask=masks)
+
+
+@partial(jax.jit, static_argnames=("cfg", "mode", "lanes"))
+def run_query_stream(store, relax, pattern_ids_queue, cfg: EngineConfig,
+                     mode: str = "specqp", lanes: int = 8) -> EngineResult:
+    """Plan + stream-execute an (M, T) query queue in one jit call.
+
+    The streaming analogue of ``run_query_batch``: instead of freezing a
+    finished lane until the batch tail, the executor splices the next
+    queued query into the freed lane, so M can far exceed ``lanes`` and
+    lockstep waste shrinks to the end-of-stream drain.
+    """
+    masks = jax.vmap(
+        lambda pids: plan_for_mode(store, relax, pids, cfg, mode)
+    )(pattern_ids_queue)
+    return run_query_stream_with_masks.__wrapped__(
+        store, relax, pattern_ids_queue, masks, cfg, lanes)
 
 
 @partial(jax.jit, static_argnames=("k", "n_entities"))

@@ -20,8 +20,18 @@ ragged pattern counts. This module is the glue between the two:
   optional — offline consumers (benchmarks, bulk evaluation) call the
   executor directly.
 
+* **Continuous refill** — with ``BatchingConfig.refill`` the flush group
+  becomes the device-resident admission queue of ONE streaming call
+  (``engine.run_query_stream_with_masks``): ``lanes`` lanes run in
+  lockstep and a finished lane is spliced with the next queued query
+  instead of freezing until the batch tail, so up to ``refill_depth``
+  queries amortize a single dispatch and lockstep waste shrinks to the
+  end-of-queue drain. ``pipeline`` double-buffers the offline path: the
+  host plans group i+1 while the device executes group i.
+
 Correctness contract: per-request results are element-wise identical to
-``engine.run_query`` on the unpadded query (tests/test_serving.py).
+``engine.run_query`` on the unpadded query (tests/test_serving.py,
+tests/test_refill.py).
 """
 from __future__ import annotations
 
@@ -29,7 +39,7 @@ import dataclasses
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np
 import jax
@@ -74,10 +84,28 @@ class BatchingConfig:
     q_buckets: tuple[int, ...] = (1, 4, 16, 64)
     # Pattern-count pads; None derives powers-of-two from observed queries.
     t_buckets: tuple[int, ...] | None = None
+    # --- continuous-refill streaming executor (DESIGN.md §8) ---
+    # refill=True routes execution through engine.run_query_stream_with_
+    # _masks: a whole admission queue of up to ``refill_depth`` queries is
+    # shipped to the device, and a lane whose HRJN bound closes is spliced
+    # with the next queued query instead of freezing until the batch tail.
+    refill: bool = False
+    # Device lanes for the streaming executor (None → max_batch). Part of
+    # the jit key: one specialization per (depth bucket, t bucket, lanes).
+    lanes: int | None = None
+    # Queue entries per streaming call; the refill analogue of max_batch.
+    refill_depth: int = 64
+    # Double-buffered plan/execute: BatchExecutor.run plans chunk i+1 on a
+    # host thread while the device executes chunk i.
+    pipeline: bool = False
 
     def __post_init__(self):
         assert self.max_batch <= max(self.q_buckets), (
             "q_buckets must cover max_batch")
+        assert not self.refill or self.refill_depth >= self.max_batch, (
+            "refill_depth must cover max_batch (MicroBatcher flush groups "
+            "are admitted whole)")
+        assert self.lanes is None or self.lanes >= 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +175,21 @@ class BatchExecutor:
             return bucket_for(t, self.bcfg.t_buckets)
         return bucket_for(t, default_t_buckets(max(t, 2)))
 
+    def _lanes_n(self) -> int:
+        """Device lanes for the streaming executor."""
+        return self.bcfg.lanes or self.bcfg.max_batch
+
+    def _m_buckets(self) -> tuple[int, ...]:
+        """Queue-depth pads for the streaming executor: the q buckets that
+        fit, topped by refill_depth itself (pad entries are all-PAD
+        queries, one executor trip each — depth padding is cheap)."""
+        return tuple(sorted({b for b in self.bcfg.q_buckets
+                             if b <= self.bcfg.refill_depth}
+                            | {self.bcfg.refill_depth}))
+
+    def _m_bucket(self, n: int) -> int:
+        return bucket_for(n, self._m_buckets())
+
     @staticmethod
     def _true_t(q: np.ndarray) -> int:
         q = np.asarray(q)
@@ -179,16 +222,37 @@ class BatchExecutor:
                 dummy = jnp.full((q_b, t_b), PAD_KEY, jnp.int32)
                 masks = engine.plan_query_batch(
                     self.store, self.relax, dummy, self.cfg, self.mode)
-                jax.block_until_ready(engine.run_query_batch_with_masks(
-                    self.store, self.relax, dummy, masks, self.cfg).scores)
+                # With refill on, the fixed-batch executor is unreachable
+                # (run_batch redirects to run_stream) — warm only the plan
+                # shapes, which the offline plan chunking still uses.
+                if not self.bcfg.refill:
+                    jax.block_until_ready(
+                        engine.run_query_batch_with_masks(
+                            self.store, self.relax, dummy, masks,
+                            self.cfg).scores)
+                n += 1
+            if not self.bcfg.refill:
+                continue
+            # Streaming specializations: (depth bucket, t bucket, lanes).
+            for m_b in self._m_buckets():
+                dummy = jnp.full((m_b, t_b), PAD_KEY, jnp.int32)
+                masks = engine.plan_query_batch(
+                    self.store, self.relax, dummy, self.cfg, self.mode)
+                jax.block_until_ready(engine.run_query_stream_with_masks(
+                    self.store, self.relax, dummy, masks, self.cfg,
+                    min(self._lanes_n(), m_b)).scores)
                 n += 1
         return n
 
-    def plan_group(self, group: list[np.ndarray]
+    def plan_group(self, group: list[np.ndarray], q_b: int | None = None
                    ) -> tuple[list[np.ndarray], float]:
-        """Plan phase: (T, R) masks per request (batched, bucket shapes)."""
+        """Plan phase: (T, R) masks per request (batched, bucket shapes).
+
+        ``q_b`` overrides the batch-size pad (the refill path plans at its
+        queue-depth buckets so plan and execute share jit shapes)."""
         t_b = self._t_bucket(max(self._true_t(q) for q in group))
-        q_b = bucket_for(len(group), self.bcfg.q_buckets)
+        if q_b is None:
+            q_b = bucket_for(len(group), self.bcfg.q_buckets)
         batch = self._pad_group(group, t_b, q_b)
         t0 = time.perf_counter()
         masks = engine.plan_query_batch(self.store, self.relax, batch,
@@ -207,40 +271,29 @@ class BatchExecutor:
         return int(self._lengths[t].sum() +
                    self._lengths[np.where(rel >= 0, rel, 0)][on].sum())
 
-    def run_batch(self, group: list[np.ndarray],
-                  masks: list[np.ndarray] | None = None
-                  ) -> list[ServedResult]:
-        """Serve one micro-batch of same-T-bucket queries (≤ max_batch).
+    def _mask_batch(self, masks: list[np.ndarray], q_b: int,
+                    t_b: int) -> jax.Array:
+        R = self._rel_ids.shape[1]
+        mask_b = np.zeros((q_b, t_b, R), bool)
+        for i, m in enumerate(masks):
+            # Rows past a query's true T are all-False padding, so
+            # trimming to this batch's t_b is lossless.
+            mask_b[i, :min(m.shape[0], t_b)] = m[:t_b]
+        return jnp.asarray(mask_b)
 
-        ``masks`` — precomputed plans from ``plan_group`` (the offline
-        scheduler plans ahead to compose batches by planned work); when
-        None, the plan phase runs here on the same padded batch. Either
-        way results are identical to per-query ``run_query``.
-        """
-        assert 0 < len(group) <= self.bcfg.max_batch
-        t_b = self._t_bucket(max(self._true_t(q) for q in group))
-        q_b = bucket_for(len(group), self.bcfg.q_buckets)
-        batch = self._pad_group(group, t_b, q_b)
-        plan_s = 0.0
-        if masks is None:
-            t0 = time.perf_counter()
-            mask_b = engine.plan_query_batch(self.store, self.relax, batch,
-                                             self.cfg, self.mode)
-            plan_s = time.perf_counter() - t0
-        else:
-            R = self._rel_ids.shape[1]
-            mask_b = np.zeros((q_b, t_b, R), bool)
-            for i, m in enumerate(masks):
-                # Rows past a query's true T are all-False padding, so
-                # trimming to this batch's t_b is lossless.
-                mask_b[i, :min(m.shape[0], t_b)] = m[:t_b]
-            mask_b = jnp.asarray(mask_b)
-        t0 = time.perf_counter()
-        res = engine.run_query_batch_with_masks(self.store, self.relax,
-                                                batch, mask_b, self.cfg)
-        jax.block_until_ready(res.scores)
-        dt = time.perf_counter() - t0
+    def _finish_batch(self, res, group: list[np.ndarray], q_b: int,
+                      t_b: int, dt: float, plan_s: float,
+                      trips: int, wasted: int | None = None
+                      ) -> list[ServedResult]:
+        """Unpad per-request results + record stats (both exec paths).
 
+        ``wasted`` overrides the waste total: the refill path passes the
+        sum over ALL queue entries, because an idle lane's drain trips
+        are attributed to the last entry it served — which can be a pad
+        entry when the queue was padded to its depth bucket. Summing real
+        entries only (the fixed-batch rule, where a pad lane's frozen
+        trips are padding artifact, not real-lane waste) would silently
+        drop that genuine idle time."""
         keys = np.asarray(res.keys)
         scores = np.asarray(res.scores)
         mask = np.asarray(res.relax_mask)
@@ -255,46 +308,188 @@ class BatchExecutor:
             relax_mask=mask[i, :self._true_t(q)],
             batch_size=len(group)) for i, q in enumerate(group)]
         useful = int(n_iters[:len(group)].sum())
-        wasted = int(n_wasted[:len(group)].sum())
+        if wasted is None:
+            wasted = int(n_wasted[:len(group)].sum())
         self._useful_total += useful
         self._wasted_total += wasted
         self.stats.append(BatchStats(
             n_requests=len(group), q_bucket=q_b, t_bucket=t_b, exec_s=dt,
-            n_iters=int(n_iters.max()), useful_iters=useful,
+            n_iters=trips, useful_iters=useful,
             wasted_iters=wasted, plan_s=plan_s))
         if len(self.stats) > self.stats_cap:
             del self.stats[:-self.stats_cap]
         return out
+
+    def run_batch(self, group: list[np.ndarray],
+                  masks: list[np.ndarray] | None = None
+                  ) -> list[ServedResult]:
+        """Serve one micro-batch of same-T-bucket queries (≤ max_batch).
+
+        ``masks`` — precomputed plans from ``plan_group`` (the offline
+        scheduler plans ahead to compose batches by planned work); when
+        None, the plan phase runs here on the same padded batch. Either
+        way results are identical to per-query ``run_query``. With
+        ``BatchingConfig.refill`` the group is served by the streaming
+        executor instead (``run_stream``) — same contract, lower waste.
+        """
+        if self.bcfg.refill:
+            return self.run_stream(group, masks)
+        assert 0 < len(group) <= self.bcfg.max_batch
+        t_b = self._t_bucket(max(self._true_t(q) for q in group))
+        q_b = bucket_for(len(group), self.bcfg.q_buckets)
+        batch = self._pad_group(group, t_b, q_b)
+        plan_s = 0.0
+        if masks is None:
+            t0 = time.perf_counter()
+            mask_b = engine.plan_query_batch(self.store, self.relax, batch,
+                                             self.cfg, self.mode)
+            plan_s = time.perf_counter() - t0
+        else:
+            mask_b = self._mask_batch(masks, q_b, t_b)
+        t0 = time.perf_counter()
+        res = engine.run_query_batch_with_masks(self.store, self.relax,
+                                                batch, mask_b, self.cfg)
+        jax.block_until_ready(res.scores)
+        dt = time.perf_counter() - t0
+        # Fixed-batch lockstep trips = the slowest lane's trip count.
+        trips = int(np.asarray(res.n_iters).max())
+        return self._finish_batch(res, group, q_b, t_b, dt, plan_s, trips)
+
+    def run_stream(self, group: list[np.ndarray],
+                   masks: list[np.ndarray] | None = None
+                   ) -> list[ServedResult]:
+        """Serve one admission queue (≤ refill_depth queries) through the
+        continuous-refill streaming executor.
+
+        The group is the device-resident admission queue of ONE
+        ``engine.run_query_stream_with_masks`` call: ``lanes`` lanes run
+        in lockstep and each finished lane is immediately spliced with the
+        next queued query. Per-request results are element-wise identical
+        to ``run_query``; the batch-tail freeze of ``run_batch`` shrinks
+        to the end-of-queue drain.
+        """
+        assert 0 < len(group) <= self.bcfg.refill_depth
+        t_b = self._t_bucket(max(self._true_t(q) for q in group))
+        m_b = self._m_bucket(len(group))
+        batch = self._pad_group(group, t_b, m_b)
+        plan_s = 0.0
+        if masks is None:
+            t0 = time.perf_counter()
+            mask_b = engine.plan_query_batch(self.store, self.relax, batch,
+                                             self.cfg, self.mode)
+            plan_s = time.perf_counter() - t0
+        else:
+            mask_b = self._mask_batch(masks, m_b, t_b)
+        # A lane beyond the queue depth would idle from trip one yet
+        # still pay the vmapped step every trip — cap lanes at the padded
+        # depth (static per jit shape, so this costs no extra compiles
+        # beyond the (m_b, t_b) grid warmup already covers).
+        lanes = min(self._lanes_n(), m_b)
+        t0 = time.perf_counter()
+        res = engine.run_query_stream_with_masks(
+            self.store, self.relax, batch, mask_b, self.cfg, lanes)
+        jax.block_until_ready(res.scores)
+        dt = time.perf_counter() - t0
+        # Streaming trip estimate: total lane-trips (useful + idle, pad
+        # entries included) spread over the lanes. Exact per-query
+        # counters live in the results; this is display-only.
+        it_all = np.asarray(res.n_iters)
+        w_all = np.asarray(res.n_wasted)
+        trips = int(-(-(int(it_all.sum()) + int(w_all.sum())) // lanes))
+        # Drain waste can be attributed to pad queue entries (the lane's
+        # last-served entry) — count every entry, not just real requests.
+        return self._finish_batch(res, group, m_b, t_b, dt, plan_s, trips,
+                                  wasted=int(w_all.sum()))
+
+    def _exec_cap(self) -> int:
+        return (self.bcfg.refill_depth if self.bcfg.refill
+                else self.bcfg.max_batch)
 
     def run(self, queries: list[np.ndarray]) -> list[ServedResult]:
         """Serve a request list offline: plan → schedule → execute.
 
         Per T bucket: the plan phase runs batched over arrival order (the
         planner vectorizes across lanes and has no lockstep loop, so batch
-        composition is irrelevant there); then micro-batches are composed
-        by *planned work* — the pullable source lengths each plan enabled —
-        so lanes sharing a lockstep loop finish at similar trip counts (a
-        heavy query mixed into a light batch makes every light lane burn
-        frozen trips); finally the execute phase runs per micro-batch with
-        the precomputed masks. Order of results matches ``queries``.
+        composition is irrelevant there); then execution groups are
+        composed by *planned work* — the pullable source lengths each plan
+        enabled. For the fixed-batch path, ascending order packs
+        similar-cost lanes into one lockstep loop (a heavy query mixed
+        into a light batch makes every light lane burn frozen trips). For
+        the refill path the admission queue absorbs skew by construction,
+        and descending order (longest processing time first) shrinks the
+        end-of-queue drain instead. With ``BatchingConfig.pipeline`` the
+        plan phase of group i+1 overlaps the execute phase of group i
+        (``_run_pipelined``). Order of results matches ``queries``.
+        """
+        if self.bcfg.pipeline:
+            return self._run_pipelined(queries)
+        by_bucket: dict[int, list[int]] = {}
+        for i, q in enumerate(queries):
+            by_bucket.setdefault(self._t_bucket(self._true_t(q)), []).append(i)
+        out: list[ServedResult | None] = [None] * len(queries)
+        serve = self.run_stream if self.bcfg.refill else self.run_batch
+        exec_cap = self._exec_cap()
+        for _, idxs in sorted(by_bucket.items()):
+            masks: dict[int, np.ndarray] = {}
+            # Plan at the exec path's own shape family: depth buckets for
+            # refill (fewer, bigger dispatches — warmup compiled them),
+            # q buckets for fixed batches.
+            chunk_cap = (self.bcfg.refill_depth if self.bcfg.refill
+                         else bucket_for(self.bcfg.max_batch,
+                                         self.bcfg.q_buckets))
+            for c in range(0, len(idxs), chunk_cap):
+                chunk = idxs[c:c + chunk_cap]
+                q_b = (self._m_bucket(len(chunk)) if self.bcfg.refill
+                       else None)
+                ms, _ = self.plan_group([queries[j] for j in chunk], q_b)
+                masks.update(zip(chunk, ms))
+            idxs = sorted(idxs, key=lambda j: self.planned_work(
+                queries[j], masks[j]), reverse=self.bcfg.refill)
+            for c in range(0, len(idxs), exec_cap):
+                chunk = idxs[c:c + exec_cap]
+                rs = serve([queries[j] for j in chunk],
+                           masks=[masks[j] for j in chunk])
+                for j, r in zip(chunk, rs):
+                    out[j] = r
+        return out  # type: ignore[return-value]
+
+    def _run_pipelined(self, queries: list[np.ndarray]
+                       ) -> list[ServedResult]:
+        """Double-buffered plan/execute: the host plans execution group
+        i+1 on a worker thread while the device executes group i.
+
+        Groups follow arrival order — the planned-work sort of ``run``
+        needs every plan before the first execute, which is exactly the
+        barrier the pipeline removes (the refill executor absorbs the
+        skew the sort existed to dodge). jax dispatch releases the GIL
+        during device compute, so the overlap is real wall-clock overlap
+        wherever the planner and the executor do not contend for cores.
         """
         by_bucket: dict[int, list[int]] = {}
         for i, q in enumerate(queries):
             by_bucket.setdefault(self._t_bucket(self._true_t(q)), []).append(i)
         out: list[ServedResult | None] = [None] * len(queries)
+        serve = self.run_stream if self.bcfg.refill else self.run_batch
+        exec_cap = self._exec_cap()
+        chunks = []
         for _, idxs in sorted(by_bucket.items()):
-            masks: dict[int, np.ndarray] = {}
-            chunk_cap = bucket_for(self.bcfg.max_batch, self.bcfg.q_buckets)
-            for c in range(0, len(idxs), chunk_cap):
-                chunk = idxs[c:c + chunk_cap]
-                ms, _ = self.plan_group([queries[j] for j in chunk])
-                masks.update(zip(chunk, ms))
-            idxs = sorted(idxs, key=lambda j: self.planned_work(
-                queries[j], masks[j]))
-            for c in range(0, len(idxs), self.bcfg.max_batch):
-                chunk = idxs[c:c + self.bcfg.max_batch]
-                rs = self.run_batch([queries[j] for j in chunk],
-                                    masks=[masks[j] for j in chunk])
+            chunks += [idxs[c:c + exec_cap]
+                       for c in range(0, len(idxs), exec_cap)]
+
+        def plan_for(chunk):
+            group = [queries[j] for j in chunk]
+            q_b = (self._m_bucket(len(chunk)) if self.bcfg.refill
+                   else bucket_for(len(chunk), self.bcfg.q_buckets))
+            return self.plan_group(group, q_b)[0]
+
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="planner") as pool:
+            fut = pool.submit(plan_for, chunks[0]) if chunks else None
+            for c, chunk in enumerate(chunks):
+                ms = fut.result()
+                if c + 1 < len(chunks):
+                    fut = pool.submit(plan_for, chunks[c + 1])
+                rs = serve([queries[j] for j in chunk], masks=ms)
                 for j, r in zip(chunk, rs):
                     out[j] = r
         return out  # type: ignore[return-value]
@@ -321,12 +516,22 @@ class MicroBatcher:
     def __init__(self, executor: BatchExecutor):
         self.executor = executor
         self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
     def submit(self, query: np.ndarray) -> Future:
+        """Enqueue one request. After ``close()`` the returned future
+        fails immediately with RuntimeError instead of hanging — a
+        request can never be enqueued behind the stop sentinel."""
         fut: Future = Future()
-        self._q.put((np.asarray(query, np.int32), fut))
+        with self._lock:
+            if self._closed:
+                fut.set_exception(RuntimeError(
+                    "MicroBatcher is closed; request rejected"))
+                return fut
+            self._q.put((np.asarray(query, np.int32), fut))
         return fut
 
     def __enter__(self):
@@ -336,14 +541,27 @@ class MicroBatcher:
         self.close()
 
     def close(self):
-        self._q.put(self._STOP)
-        self._thread.join()
+        """Stop accepting requests, drain the queue, join the worker.
+
+        Every future submitted before close() resolves (with a result or
+        the error its batch raised) before this returns; submits that
+        race with close() either make it in before the sentinel or fail
+        fast in ``submit``. Idempotent.
+        """
+        with self._lock:
+            already = self._closed
+            self._closed = True
+            if not already:
+                self._q.put(self._STOP)
+        if self._thread.is_alive():
+            self._thread.join()
 
     def _loop(self):
         bcfg = self.executor.bcfg
         while True:
             item = self._q.get()
             if item is self._STOP:
+                self._drain_and_exit([])
                 return
             pending = [item]
             deadline = time.perf_counter() + bcfg.max_wait_s
@@ -356,10 +574,26 @@ class MicroBatcher:
                 except queue.Empty:
                     break
                 if nxt is self._STOP:
-                    self._flush(pending)
+                    self._drain_and_exit(pending)
                     return
                 pending.append(nxt)
             self._flush(pending)
+
+    def _drain_and_exit(self, pending):
+        """Serve everything still queued at shutdown so no future is
+        stranded (regression: requests behind the stop sentinel used to
+        hang forever)."""
+        pending = list(pending)
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not self._STOP:
+                pending.append(item)
+        cap = self.executor.bcfg.max_batch
+        for c in range(0, len(pending), cap):
+            self._flush(pending[c:c + cap])
 
     def _flush(self, pending):
         """Serve one flush group. Never raises: any error — bucketing a

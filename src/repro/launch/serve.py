@@ -55,6 +55,17 @@ def main():
     ap.add_argument("--n-queries", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--refill", action="store_true",
+                    help="continuous-refill streaming executor: finished "
+                         "lanes are spliced with queued queries instead of "
+                         "freezing until the batch tail")
+    ap.add_argument("--lanes", type=int, default=None,
+                    help="device lanes for --refill (default: max-batch)")
+    ap.add_argument("--refill-depth", type=int, default=64,
+                    help="admission-queue entries per streaming call")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="overlap planning of group i+1 with execution of "
+                         "group i (offline mode)")
     ap.add_argument("--arrival-qps", type=float, default=None,
                     help="replay as a Poisson arrival process through the "
                          "threaded MicroBatcher (default: offline batches)")
@@ -72,13 +83,18 @@ def main():
                               if b <= args.max_batch} | {args.max_batch}))
     bcfg = batching.BatchingConfig(
         max_batch=args.max_batch, max_wait_s=args.max_wait_ms * 1e-3,
-        q_buckets=q_buckets, t_buckets=tuple(t_set))
+        q_buckets=q_buckets, t_buckets=tuple(t_set),
+        refill=args.refill, lanes=args.lanes,
+        refill_depth=args.refill_depth, pipeline=args.pipeline)
     ex = batching.BatchExecutor(wl.store, wl.relax, cfg, args.mode, bcfg)
     n_compiled = ex.warmup()
+    extra = (f" refill(lanes={ex._lanes_n()}, depth={bcfg.refill_depth})"
+             if args.refill else "")
     print(f"{args.dataset} mode={args.mode} k={args.k}: "
           f"{len(queries)} queries | warmed {n_compiled} "
           f"(q_bucket × t_bucket) jit specializations "
-          f"q={bcfg.q_buckets} t={bcfg.t_buckets}")
+          f"q={bcfg.q_buckets} t={bcfg.t_buckets}{extra}"
+          f"{' pipeline' if args.pipeline else ''}")
 
     seq_wall, seq_lat = sequential_baseline(wl, cfg, args.mode, queries)
     print(f"  sequential: {len(queries) / seq_wall:7.1f} QPS | "
@@ -114,8 +130,12 @@ def main():
         t_start = time.perf_counter()
         ex.run(queries)
         wall = time.perf_counter() - t_start
-        # Offline latency = completion time of the request's micro-batch.
-        lat = np.asarray([s.exec_s for s in ex.stats
+        # Offline latency = completion time of the request's micro-batch
+        # plus its amortized share of the plan phase (same accounting as
+        # benchmarks.paper_tables, and comparable to the sequential
+        # baseline, whose run_query times include planning).
+        plan_amort = ex.plan_total_s / max(len(queries), 1)
+        lat = np.asarray([s.exec_s + plan_amort for s in ex.stats
                           for _ in range(s.n_requests)])
         label = "batched    "
     mean_b = np.mean([s.n_requests for s in ex.stats]) if ex.stats else 0

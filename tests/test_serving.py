@@ -176,6 +176,79 @@ def test_microbatcher_survives_bad_request():
     np.testing.assert_array_equal(r.keys, np.asarray(s.keys))
 
 
+def test_refill_wasted_leq_fixed_on_skew():
+    """Lockstep accounting on the refill path: on a skewed workload the
+    streaming executor's total wasted trips never exceed the fixed-batch
+    executor's (a finished lane takes new work instead of freezing), and
+    when every lane finishes together there is no waste at all. Totals
+    come from the executor's running counters, which — unlike summing
+    per-request n_wasted — include drain trips attributed to pad queue
+    entries (both executors run the same queries, so the useful totals
+    match and the wasted totals are directly comparable)."""
+    wl = small_workload(seed=1, n_queries=8)
+    queries = [np.asarray(q) for q in wl.queries]
+    fixed = _executor(wl, "specqp")
+    rcfg = batching.BatchingConfig(
+        max_batch=4, max_wait_s=0.01, q_buckets=(1, 4, 8),
+        t_buckets=(2, 3), refill=True, lanes=4, refill_depth=8)
+    refill = batching.BatchExecutor(wl.store, wl.relax, CFG, "specqp",
+                                    rcfg)
+    rf = refill.run(queries)
+    fx = fixed.run(queries)
+    for r, f in zip(rf, fx):
+        np.testing.assert_array_equal(r.keys, f.keys)
+    assert refill._useful_total == fixed._useful_total
+    assert refill._wasted_total <= fixed._wasted_total, (
+        f"refill wasted {refill._wasted_total} > fixed "
+        f"{fixed._wasted_total}")
+    # Uniform queue, M == lanes: all lanes close together, zero waste.
+    refill.reset_stats()
+    refill.run([np.asarray(wl.queries[0])] * 4)
+    assert refill._wasted_total == 0
+
+
+def test_microbatcher_close_drains_pending():
+    """close() resolves every future submitted before (or racing with)
+    shutdown — with a result or the closed-rejection — and no future
+    hangs forever. Regression: requests enqueued behind the stop sentinel
+    used to be stranded unresolved."""
+    import threading
+
+    wl = small_workload(seed=0, n_queries=4)
+    ex = _executor(wl, "join_only")
+    mb = batching.MicroBatcher(ex)
+    q = np.asarray(wl.queries[0])
+    futs, stop = [], threading.Event()
+
+    def submitter():
+        while not stop.is_set():
+            futs.append(mb.submit(q))
+
+    th = threading.Thread(target=submitter)
+    th.start()
+    while len(futs) < 8:       # let a backlog build behind the worker
+        pass
+    mb.close()                 # races with in-flight submits
+    stop.set()
+    th.join()
+    mb.close()                 # idempotent
+    s = engine.run_query(wl.store, wl.relax, jnp.asarray(q), CFG,
+                         "join_only")
+    n_served = 0
+    for f in futs:
+        assert f.done(), "future left unresolved after close()"
+        if f.exception() is None:
+            np.testing.assert_array_equal(f.result().keys,
+                                          np.asarray(s.keys))
+            n_served += 1
+        else:
+            assert isinstance(f.exception(), RuntimeError)
+    assert n_served >= 8       # the pre-close backlog was served, not lost
+    # After close, submit fails fast instead of hanging.
+    late = mb.submit(q)
+    assert late.done() and isinstance(late.exception(), RuntimeError)
+
+
 def test_bucket_helpers():
     assert batching.bucket_for(1, (1, 4, 16)) == 1
     assert batching.bucket_for(5, (1, 4, 16)) == 16
