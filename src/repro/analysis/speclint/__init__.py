@@ -1,0 +1,13 @@
+"""speclint — machine-checked invariants for the engine & serving layers.
+
+Five rule families (DESIGN.md §9): trace-safety (TS), jit-boundary
+hygiene (JB), Pallas kernel contracts (PK), lock discipline (LD),
+scatter modes (SG). Run as a module::
+
+    PYTHONPATH=src python -m repro.analysis.speclint src/repro
+
+or use :func:`lint_paths` / :func:`lint_files` programmatically.
+"""
+from repro.analysis.speclint.core import Finding, FAMILIES  # noqa: F401
+from repro.analysis.speclint.cli import (main, lint_paths,  # noqa: F401
+                                         lint_files, collect_files)

@@ -1,0 +1,65 @@
+"""Baseline handling: checked-in waivers so CI fails only on regressions.
+
+The baseline is a JSON file of fingerprinted findings, each with a
+required justification. Fingerprints hash (file basename, rule, context,
+normalized source line) — NOT line numbers — so unrelated edits above a
+waived site do not invalidate it, while editing the flagged line itself
+does (the waiver must then be re-justified against the new code).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.speclint.core import Finding, SourceFile
+
+BASELINE_VERSION = 1
+
+
+def load(path: str | Path) -> dict[str, dict]:
+    """fingerprint -> entry. Missing file -> empty baseline."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {p}")
+    return {e["fingerprint"]: e for e in data.get("waivers", [])}
+
+
+def save(path: str | Path, findings: list[tuple[Finding, str]]) -> None:
+    """Write findings (with their source lines) as a fresh baseline.
+    Justifications default to a TODO that WV002 keeps visible."""
+    entries = []
+    for f, src_line in sorted(findings,
+                              key=lambda x: (x[0].path, x[0].line)):
+        entries.append({
+            "fingerprint": f.fingerprint(src_line),
+            "rule": f.rule,
+            "path": f.path,
+            "context": f.context,
+            "line_snapshot": src_line.strip(),
+            "justification": "TODO: justify or fix",
+        })
+    Path(path).write_text(json.dumps(
+        {"version": BASELINE_VERSION, "waivers": entries}, indent=2)
+        + "\n")
+
+
+def split(findings: list[Finding], files: dict[str, SourceFile],
+          baseline: dict[str, dict]
+          ) -> tuple[list[Finding], list[Finding], list[Finding]]:
+    """(new, baselined, unjustified-baselined) partition of findings."""
+    new, old, unjust = [], [], []
+    for f in findings:
+        sf = files.get(f.path)
+        src = sf.line_at(f.line) if sf else ""
+        entry = baseline.get(f.fingerprint(src))
+        if entry is None:
+            new.append(f)
+        elif not entry.get("justification", "").strip() or \
+                entry.get("justification", "").startswith("TODO"):
+            unjust.append(f)
+        else:
+            old.append(f)
+    return new, old, unjust

@@ -1,0 +1,139 @@
+"""speclint CLI: `python -m repro.analysis.speclint src/repro`.
+
+Exit codes: 0 clean (all findings baselined or inline-waived), 1 new
+findings, 2 usage / parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.speclint import baseline as baseline_mod
+from repro.analysis.speclint import report
+from repro.analysis.speclint.core import (Finding, SourceFile,
+                                          rule_passes, FAMILIES)
+from repro.analysis.speclint.jitgraph import ProjectIndex
+# Importing the rule modules registers their passes.
+from repro.analysis.speclint import (rules_trace, rules_jit,  # noqa: F401
+                                     rules_pallas, rules_lock,
+                                     rules_scatter)
+
+
+def collect_files(paths: list[str]) -> list[SourceFile]:
+    out: list[SourceFile] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            candidates = sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            candidates = [path]
+        else:
+            raise FileNotFoundError(f"not a python file or directory: {p}")
+        for c in candidates:
+            out.append(SourceFile.load(c))
+    return out
+
+
+def lint_files(files: list[SourceFile],
+               select: set[str] | None = None
+               ) -> tuple[list[Finding], ProjectIndex]:
+    """All findings (pre-waiver/baseline), sorted, plus the index."""
+    index = ProjectIndex(files)
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(f.waiver_hygiene_findings())
+    for _name, rule in rule_passes():
+        findings.extend(rule(files, index))
+    if select:
+        findings = [f for f in findings
+                    if f.rule in select or f.rule[:2] in select]
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, index
+
+
+def lint_paths(paths: list[str], select: set[str] | None = None
+               ) -> list[Finding]:
+    """Library entry point: findings after inline waivers (no baseline)."""
+    files = collect_files(paths)
+    findings, _ = lint_files(files, select)
+    by_path = {f.path: f for f in files}
+    return [f for f in findings
+            if not (f.path in by_path and by_path[f.path].is_waived(f))]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.speclint",
+        description="Static trace-safety / kernel-contract / "
+                    "lock-discipline lint for this codebase "
+                    "(DESIGN.md §9).")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint (e.g. src/repro)")
+    ap.add_argument("--baseline", default="speclint_baseline.json",
+                    help="baseline JSON of justified waivers "
+                         "(default: ./speclint_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current findings to the baseline "
+                         "(justifications start as TODO and still fail "
+                         "CI until filled in)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write a JSON report to this path")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids or family prefixes "
+                         "to run (e.g. TS,PK005)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule families and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for prefix, family in FAMILIES.items():
+            print(f"{prefix}xxx  {family}")
+        return 0
+    if not args.paths:
+        ap.error("paths required (e.g. src/repro)")
+
+    select = ({s.strip() for s in args.select.split(",")}
+              if args.select else None)
+    try:
+        files = collect_files(args.paths)
+    except (FileNotFoundError, SyntaxError) as e:
+        print(f"speclint: {e}", file=sys.stderr)
+        return 2
+
+    findings, _ = lint_files(files, select)
+    by_path = {f.path: f for f in files}
+
+    waived, active = [], []
+    for f in findings:
+        sf = by_path.get(f.path)
+        (waived if sf and sf.is_waived(f) else active).append(f)
+
+    if args.update_baseline:
+        pairs = [(f, by_path[f.path].line_at(f.line)
+                  if f.path in by_path else "") for f in active]
+        baseline_mod.save(args.baseline, pairs)
+        print(f"speclint: wrote {len(pairs)} entries to {args.baseline} "
+              f"(fill in the justifications)")
+        return 0
+
+    base = ({} if args.no_baseline
+            else baseline_mod.load(args.baseline))
+    new, old, unjust = baseline_mod.split(active, by_path, base)
+    for f in unjust:
+        new.append(Finding(
+            rule="WV002", path=f.path, line=f.line,
+            message=f"baselined finding {f.rule} has no justification",
+            hint="edit the baseline entry's `justification` (or fix the "
+                 "finding and delete the entry)",
+            context=f.context))
+
+    print(report.render_text(new, by_path, baselined=len(old),
+                             waived=len(waived)))
+    if args.json_out:
+        report.write_json(args.json_out, new, by_path,
+                          baselined=len(old), waived=len(waived),
+                          checked_files=len(files))
+    return 1 if new else 0

@@ -1,0 +1,160 @@
+"""speclint core: findings, source-file model, waivers, rule registry.
+
+speclint is an AST-based analyzer purpose-built for THIS codebase
+(DESIGN.md §9). It machine-checks the invariants the engine and serving
+layers only used to state in docstrings: trace-safety of jit-reachable
+code, jit static-argument hygiene, Pallas kernel contracts, serving-layer
+lock discipline, and explicit scatter modes. It is deliberately heuristic
+— a lint, not a verifier: rules are tuned to the idioms used here, and
+every finding carries a fix hint plus two escape hatches (an inline
+waiver comment with a justification, or a baseline entry).
+
+Waiver syntax (on the offending line or the line directly above)::
+
+    x = foo()  # speclint: waive[TS001] bound is static per jit shape
+
+The justification text after the rule list is REQUIRED — a bare waiver is
+itself reported (WV001) so silencing a rule always leaves a reviewable
+reason in the diff.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import re
+from pathlib import Path
+from typing import Callable, Iterable
+
+FAMILIES = {
+    "TS": "trace-safety",
+    "JB": "jit-boundary",
+    "PK": "pallas-contract",
+    "LD": "lock-discipline",
+    "SG": "scatter-mode",
+    "WV": "waiver-hygiene",
+}
+
+_WAIVE_RE = re.compile(
+    r"#\s*speclint:\s*waive\[([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)\]"
+    r"\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str       # e.g. "TS001"
+    path: str       # file path as given to the linter
+    line: int       # 1-based
+    message: str    # what is wrong
+    hint: str       # how to fix (or how to waive legitimately)
+    context: str    # enclosing function/class qualname ("" at module level)
+
+    @property
+    def family(self) -> str:
+        return FAMILIES.get(self.rule[:2], "unknown")
+
+    def fingerprint(self, src_line: str = "") -> str:
+        """Stable id for baseline matching: independent of line numbers
+        (insertions above a waived site must not invalidate its waiver),
+        keyed on file, rule, enclosing context and the normalized source
+        text of the flagged line."""
+        basis = "|".join([Path(self.path).name, self.rule, self.context,
+                          " ".join(src_line.split())])
+        return hashlib.sha1(basis.encode()).hexdigest()[:16]
+
+    def render(self, src_line: str = "") -> str:
+        return (f"{self.path}:{self.line}: {self.rule} [{self.family}] "
+                f"{self.message}\n    hint: {self.hint}")
+
+
+class SourceFile:
+    """Parsed module plus per-line waivers."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        # line -> set of waived rule ids; line -> justification text
+        self.waivers: dict[int, set[str]] = {}
+        self.waiver_reasons: dict[int, str] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _WAIVE_RE.search(line)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")}
+                self.waivers[i] = rules
+                self.waiver_reasons[i] = m.group(2).strip()
+
+    @classmethod
+    def load(cls, path: str | Path) -> "SourceFile":
+        p = Path(path)
+        return cls(str(p), p.read_text())
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def is_waived(self, finding: Finding) -> bool:
+        """A waiver on the finding's line (or the line above it) with a
+        non-empty justification suppresses the finding."""
+        for ln in (finding.line, finding.line - 1):
+            rules = self.waivers.get(ln)
+            if rules and finding.rule in rules:
+                return bool(self.waiver_reasons.get(ln))
+        return False
+
+    def waiver_hygiene_findings(self) -> list[Finding]:
+        """WV001: waivers without a justification are themselves findings
+        — silencing a rule must leave a reviewable reason."""
+        out = []
+        for ln, reason in self.waiver_reasons.items():
+            if not reason:
+                out.append(Finding(
+                    rule="WV001", path=self.path, line=ln,
+                    message="waiver has no justification text",
+                    hint="append a reason: "
+                         "`# speclint: waive[XX000] <why this is safe>`",
+                    context=""))
+        return out
+
+
+# A rule pass takes (files, project_index) and yields findings. The
+# project index (jitgraph.ProjectIndex) carries cross-module facts: the
+# jit-reachability set, dataclass registry, import-alias maps.
+RulePass = Callable[[list[SourceFile], "object"], Iterable[Finding]]
+
+_PASSES: list[tuple[str, RulePass]] = []
+
+
+def register(name: str):
+    def deco(fn: RulePass) -> RulePass:
+        _PASSES.append((name, fn))
+        return fn
+    return deco
+
+
+def rule_passes() -> list[tuple[str, RulePass]]:
+    return list(_PASSES)
+
+
+def qualname_of(stack: list[ast.AST]) -> str:
+    """Dotted name of the enclosing defs/classes for a node stack."""
+    parts = [n.name for n in stack
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef))]
+    return ".".join(parts)
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """`a.b.c` for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None

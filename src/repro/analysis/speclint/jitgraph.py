@@ -1,0 +1,338 @@
+"""Project index + jit-reachability graph for speclint.
+
+Builds, from the parsed modules alone (nothing is imported or executed):
+
+* per-module import-alias maps, so ``jnp.where`` / ``ops.pull_block`` /
+  ``pl.pallas_call`` resolve to full dotted names;
+* a function index (top-level functions and class methods);
+* a dataclass registry (frozen? registered as a pytree via the repo's
+  ``_pytree`` decorator?) for static-argument hashability checks;
+* the set of **traced** functions: everything reachable from a trace
+  root through the intra-project call graph. Trace roots are
+  ``jax.jit``-decorated functions, Pallas kernel bodies, and functions
+  passed to ``lax.while_loop`` / ``lax.cond`` / ``lax.scan`` /
+  ``jax.vmap`` and friends (those trace their callees even outside jit).
+
+The reachability set is what scopes the trace-safety and scatter-mode
+families: a Python ``if`` on an array is fine in host code and a bug
+under trace, so the rules only fire inside this set.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+from repro.analysis.speclint.core import SourceFile, dotted_name
+
+# Callables whose function-valued arguments are traced.
+TRACING_HOFS = {
+    "jax.lax.while_loop", "jax.lax.cond", "jax.lax.scan",
+    "jax.lax.fori_loop", "jax.lax.switch", "jax.lax.map",
+    "jax.lax.associative_scan", "jax.vmap", "jax.pmap", "jax.jit",
+    "jax.grad", "jax.value_and_grad", "jax.checkpoint", "jax.remat",
+    "jax.experimental.shard_map.shard_map",
+}
+
+PALLAS_CALL = {"jax.experimental.pallas.pallas_call", "pl.pallas_call"}
+
+# Annotations that mark a parameter as host-static (never traced).
+STATIC_ANNOTATIONS = {
+    "int", "float", "bool", "str", "bytes", "tuple", "type", "None",
+}
+
+ARRAY_ANNOTATIONS = {
+    "jax.Array", "jax.numpy.ndarray", "numpy.ndarray", "chex.Array",
+}
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    module: str
+    lineno: int
+    is_dataclass: bool = False
+    frozen: bool = False
+    pytree: bool = False    # repro.core.types._pytree-registered container
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    module: str
+    qual: str               # "fn" or "Class.meth"
+    node: ast.FunctionDef
+    path: str
+    params: tuple[str, ...]
+    annotations: dict[str, str | None]
+    jit_root: bool = False
+    static_argnames: tuple[str, ...] | None = None
+    static_argnames_line: int = 0
+    pallas_kernel: bool = False
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.module, self.qual)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    dotted: str
+    file: SourceFile
+    aliases: dict[str, str]
+    funcs: dict[str, FuncInfo]
+    classes: dict[str, ClassInfo]
+
+    def resolve(self, name: str | None) -> str | None:
+        """Expand the leading segment of a dotted name via the module's
+        import aliases ('jnp.where' -> 'jax.numpy.where')."""
+        if not name:
+            return None
+        head, _, rest = name.partition(".")
+        target = self.aliases.get(head, head)
+        return f"{target}.{rest}" if rest else target
+
+    def resolve_node(self, node: ast.AST) -> str | None:
+        return self.resolve(dotted_name(node))
+
+
+def module_dotted(path: str) -> str:
+    """Dotted module name; anchored at the last 'repro' path segment so
+    linted trees resolve like the installed package. Files outside a
+    repro tree (tmp fixtures in tests) fall back to their stem."""
+    parts = Path(path).with_suffix("").parts
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        parts = parts[i:]
+    else:
+        parts = parts[-1:]
+    return ".".join(parts)
+
+
+def _collect_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _ann_str(mod: ModuleInfo, ann: ast.AST | None) -> str | None:
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:
+            ann = ast.parse(ann.value, mode="eval").body
+        except SyntaxError:
+            return ann.value
+    # `X | None` etc: classify by the first non-None branch.
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        left = _ann_str(mod, ann.left)
+        return left if left not in (None, "None") else _ann_str(mod, ann.right)
+    if isinstance(ann, ast.Subscript):          # tuple[int, ...] -> tuple
+        return _ann_str(mod, ann.value)
+    name = dotted_name(ann)
+    return mod.resolve(name) if name else None
+
+
+def _jit_static_argnames(mod: ModuleInfo, deco: ast.AST
+                         ) -> tuple[bool, tuple[str, ...] | None]:
+    """(is_jit_decorator, static_argnames or None)."""
+    call = deco if isinstance(deco, ast.Call) else None
+    target = mod.resolve_node(call.func if call else deco)
+    if target in ("functools.partial",) and call and call.args:
+        inner = mod.resolve_node(call.args[0])
+        if inner == "jax.jit":
+            return True, _extract_static(call)
+        return False, None
+    if target == "jax.jit":
+        return True, (_extract_static(call) if call else None)
+    return False, None
+
+
+def _extract_static(call: ast.Call) -> tuple[str, ...] | None:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for el in v.elts:
+                    if isinstance(el, ast.Constant) and isinstance(
+                            el.value, str):
+                        out.append(el.value)
+                return tuple(out)
+    return None
+
+
+def _func_params(node: ast.FunctionDef) -> tuple[tuple[str, ...],
+                                                 dict[str, ast.AST | None]]:
+    args = node.args
+    all_args = (list(args.posonlyargs) + list(args.args)
+                + list(args.kwonlyargs))
+    names = tuple(a.arg for a in all_args)
+    anns = {a.arg: a.annotation for a in all_args}
+    return names, anns
+
+
+class ProjectIndex:
+    """All cross-module facts the rule passes need."""
+
+    def __init__(self, files: list[SourceFile]):
+        self.modules: dict[str, ModuleInfo] = {}
+        self.by_path: dict[str, ModuleInfo] = {}
+        for f in files:
+            dotted = module_dotted(f.path)
+            mod = ModuleInfo(dotted=dotted, file=f,
+                             aliases=_collect_aliases(f.tree),
+                             funcs={}, classes={})
+            self.modules[dotted] = mod
+            self.by_path[f.path] = mod
+        for mod in self.modules.values():
+            self._index_module(mod)
+        self.classes: dict[str, ClassInfo] = {}
+        for mod in self.modules.values():
+            self.classes.update(mod.classes)
+        self.reachable: set[tuple[str, str]] = set()
+        self._compute_reachability()
+
+    # ---------------------------------------------------------------- index
+    def _index_module(self, mod: ModuleInfo) -> None:
+        for node in mod.file.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._index_func(mod, node, prefix="")
+            elif isinstance(node, ast.ClassDef):
+                mod.classes[node.name] = self._class_info(mod, node)
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        self._index_func(mod, sub,
+                                         prefix=f"{node.name}.")
+
+    def _index_func(self, mod: ModuleInfo, node: ast.FunctionDef,
+                    prefix: str) -> None:
+        params, ann_nodes = _func_params(node)
+        info = FuncInfo(
+            module=mod.dotted, qual=f"{prefix}{node.name}", node=node,
+            path=mod.file.path, params=params,
+            annotations={k: _ann_str(mod, v)
+                         for k, v in ann_nodes.items()})
+        for deco in node.decorator_list:
+            is_jit, static = _jit_static_argnames(mod, deco)
+            if is_jit:
+                info.jit_root = True
+                info.static_argnames = static
+                info.static_argnames_line = deco.lineno
+        mod.funcs[info.qual] = info
+
+    def _class_info(self, mod: ModuleInfo, node: ast.ClassDef) -> ClassInfo:
+        ci = ClassInfo(name=node.name, module=mod.dotted,
+                       lineno=node.lineno)
+        for deco in node.decorator_list:
+            call = deco if isinstance(deco, ast.Call) else None
+            target = mod.resolve_node(call.func if call else deco)
+            if target in ("dataclasses.dataclass", "dataclass"):
+                ci.is_dataclass = True
+                if call:
+                    for kw in call.keywords:
+                        if (kw.arg == "frozen"
+                                and isinstance(kw.value, ast.Constant)):
+                            ci.frozen = bool(kw.value.value)
+            elif target and target.endswith("_pytree"):
+                # repro.core.types._pytree: frozen dataclass REGISTERED
+                # as a pytree — an array container, hence not a valid
+                # static argument even though technically frozen.
+                ci.is_dataclass = True
+                ci.frozen = True
+                ci.pytree = True
+        return ci
+
+    # -------------------------------------------------------- reachability
+    def _func_refs(self, mod: ModuleInfo, root: ast.FunctionDef,
+                   cls: str | None) -> set[tuple[str, str]]:
+        """Project functions referenced anywhere inside ``root``'s body
+        (calls, bare references passed to HOFs, self.method calls)."""
+        out: set[tuple[str, str]] = set()
+
+        def resolve_ref(node: ast.AST) -> None:
+            if isinstance(node, ast.Name):
+                if node.id in mod.funcs:
+                    out.add((mod.dotted, node.id))
+            elif isinstance(node, ast.Attribute):
+                base = node.value
+                if (isinstance(base, ast.Name) and base.id == "self"
+                        and cls and f"{cls}.{node.attr}" in mod.funcs):
+                    out.add((mod.dotted, f"{cls}.{node.attr}"))
+                    return
+                dn = mod.resolve_node(node)
+                if dn:
+                    head, _, fn = dn.rpartition(".")
+                    target = self.modules.get(head)
+                    if target and fn in target.funcs:
+                        out.add((head, fn))
+
+        for node in ast.walk(root):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                resolve_ref(node)
+        return out
+
+    def _compute_reachability(self) -> None:
+        roots: list[tuple[str, str]] = []
+        for mod in self.modules.values():
+            for info in mod.funcs.values():
+                if info.jit_root:
+                    roots.append(info.key)
+            # Pallas kernel bodies + functions handed to tracing HOFs are
+            # roots even when the enclosing function is host-only.
+            for node in ast.walk(mod.file.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = mod.resolve_node(node.func)
+                if target in PALLAS_CALL and node.args:
+                    kfn = node.args[0]
+                    if (isinstance(kfn, ast.Call)
+                            and mod.resolve_node(kfn.func)
+                            == "functools.partial" and kfn.args):
+                        kfn = kfn.args[0]
+                    if isinstance(kfn, ast.Name) and kfn.id in mod.funcs:
+                        mod.funcs[kfn.id].pallas_kernel = True
+                        roots.append((mod.dotted, kfn.id))
+                elif target in TRACING_HOFS:
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name) and arg.id in mod.funcs:
+                            roots.append((mod.dotted, arg.id))
+
+        seen: set[tuple[str, str]] = set()
+        frontier = list(roots)
+        while frontier:
+            key = frontier.pop()
+            if key in seen:
+                continue
+            seen.add(key)
+            mod = self.modules.get(key[0])
+            if not mod or key[1] not in mod.funcs:
+                continue
+            info = mod.funcs[key[1]]
+            cls = key[1].split(".")[0] if "." in key[1] else None
+            frontier.extend(self._func_refs(mod, info.node, cls) - seen)
+        self.reachable = seen
+
+    # ------------------------------------------------------------- helpers
+    def is_traced(self, module: str, qual: str) -> bool:
+        return (module, qual) in self.reachable
+
+    def lookup_class(self, mod: ModuleInfo, ann: str | None
+                     ) -> ClassInfo | None:
+        """ClassInfo for a resolved annotation string, if it names a
+        project class ('repro.core.types.EngineConfig' or bare name)."""
+        if not ann:
+            return None
+        head, _, cls = ann.rpartition(".")
+        if head and head in self.modules:
+            return self.modules[head].classes.get(cls)
+        return self.classes.get(ann.split(".")[-1])

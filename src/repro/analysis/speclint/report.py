@@ -1,0 +1,59 @@
+"""Finding rendering: terminal text + machine-readable JSON report."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from pathlib import Path
+
+from repro.analysis.speclint.core import Finding, SourceFile, FAMILIES
+
+
+def render_text(findings: list[Finding], files: dict[str, SourceFile],
+                baselined: int = 0, waived: int = 0) -> str:
+    out = []
+    for f in sorted(findings, key=lambda x: (x.path, x.line, x.rule)):
+        out.append(f.render())
+        sf = files.get(f.path)
+        if sf:
+            src = sf.line_at(f.line).strip()
+            if src:
+                out.append(f"    | {src}")
+    by_fam = Counter(f.family for f in findings)
+    summary = ", ".join(f"{n} {fam}" for fam, n in sorted(by_fam.items()))
+    tail = (f"speclint: {len(findings)} finding(s)"
+            + (f" [{summary}]" if summary else ""))
+    extras = []
+    if baselined:
+        extras.append(f"{baselined} baselined")
+    if waived:
+        extras.append(f"{waived} waived inline")
+    if extras:
+        tail += f" ({', '.join(extras)})"
+    out.append(tail)
+    return "\n".join(out)
+
+
+def write_json(path: str | Path, findings: list[Finding],
+               files: dict[str, SourceFile], *, baselined: int,
+               waived: int, checked_files: int) -> None:
+    payload = {
+        "tool": "speclint",
+        "families": FAMILIES,
+        "checked_files": checked_files,
+        "counts": {
+            "new": len(findings),
+            "baselined": baselined,
+            "waived_inline": waived,
+        },
+        "findings": [
+            {**dataclasses.asdict(f), "family": f.family,
+             "source": (files[f.path].line_at(f.line).strip()
+                        if f.path in files else "")}
+            for f in sorted(findings,
+                            key=lambda x: (x.path, x.line, x.rule))
+        ],
+    }
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(payload, indent=2) + "\n")

@@ -1,0 +1,111 @@
+"""Jit-boundary hygiene rules (JB) — static_argnames honesty.
+
+A ``static_argnames`` entry is a contract: the named argument is hashed
+into the jit cache key. Three ways that contract silently rots:
+
+* the name no longer matches any parameter (refactor drift) — jax only
+  errors when the arg is actually passed by keyword, so a misspelled
+  entry can linger while every call retraces (JB001);
+* the static parameter's type is unhashable (arrays, pytree containers,
+  non-frozen dataclasses) — every call either crashes or, for mutable
+  configs, retraces per instance (JB002);
+* a static parameter carries a mutable default (JB003).
+
+Rules:
+  JB001  static_argnames entry matches no parameter
+  JB002  static parameter annotated with an unhashable / pytree type
+  JB003  static parameter with a mutable default value
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.speclint.core import Finding, register
+from repro.analysis.speclint.jitgraph import (ProjectIndex,
+                                              ARRAY_ANNOTATIONS)
+
+
+@register("jit-boundary")
+def run(files, index: ProjectIndex):
+    out: list[Finding] = []
+    for mod in index.modules.values():
+        for info in mod.funcs.values():
+            if not info.jit_root or info.static_argnames is None:
+                continue
+            ctx = f"{info.module}:{info.qual}"
+            line = info.static_argnames_line or info.node.lineno
+            for name in info.static_argnames:
+                if name not in info.params:
+                    out.append(Finding(
+                        rule="JB001", path=info.path, line=line,
+                        message=f"static_argnames entry '{name}' matches "
+                                f"no parameter of {info.qual}"
+                                f"({', '.join(info.params)})",
+                        hint="fix the spelling or drop the entry — a "
+                             "stale name silently stops pinning the "
+                             "argument into the jit cache key",
+                        context=ctx))
+                    continue
+                ann = info.annotations.get(name)
+                leaf = (ann or "").split(".")[-1]
+                ci = index.lookup_class(mod, ann)
+                if ann in ARRAY_ANNOTATIONS or leaf == "Array":
+                    out.append(Finding(
+                        rule="JB002", path=info.path, line=line,
+                        message=f"static parameter '{name}' is annotated "
+                                f"as an array ({ann}) — arrays are "
+                                f"unhashable and must be traced",
+                        hint="remove it from static_argnames",
+                        context=ctx))
+                elif leaf in ("list", "dict", "set", "List", "Dict",
+                              "Set"):
+                    out.append(Finding(
+                        rule="JB002", path=info.path, line=line,
+                        message=f"static parameter '{name}' has "
+                                f"unhashable annotation {ann}",
+                        hint="use a tuple / frozen container so the jit "
+                             "cache key can hash it",
+                        context=ctx))
+                elif ci is not None and ci.is_dataclass:
+                    if ci.pytree:
+                        out.append(Finding(
+                            rule="JB002", path=info.path, line=line,
+                            message=f"static parameter '{name}' is a "
+                                    f"pytree container ({ci.name}) — "
+                                    f"hashing it hashes its arrays",
+                            hint="pass pytrees dynamically; only config "
+                                 "dataclasses belong in static_argnames",
+                            context=ctx))
+                    elif not ci.frozen:
+                        out.append(Finding(
+                            rule="JB002", path=info.path, line=line,
+                            message=f"static parameter '{name}' is a "
+                                    f"non-frozen dataclass ({ci.name}) — "
+                                    f"mutable, hence unhashable",
+                            hint=f"declare {ci.name} with "
+                                 f"@dataclass(frozen=True)",
+                            context=ctx))
+            out.extend(_mutable_defaults(info, ctx))
+    return out
+
+
+def _mutable_defaults(info, ctx: str) -> list[Finding]:
+    out = []
+    args = info.node.args
+    pos = list(args.posonlyargs) + list(args.args)
+    defaults = list(args.defaults)
+    pairs = list(zip([a.arg for a in pos[len(pos) - len(defaults):]],
+                     defaults))
+    pairs += [(a.arg, d) for a, d in zip(args.kwonlyargs, args.kw_defaults)
+              if d is not None]
+    for name, default in pairs:
+        if name not in (info.static_argnames or ()):
+            continue
+        if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+            out.append(Finding(
+                rule="JB003", path=info.path, line=default.lineno,
+                message=f"static parameter '{name}' has a mutable "
+                        f"default — unhashable at every call",
+                hint="use a tuple / frozen value as the default",
+                context=ctx))
+    return out

@@ -1,0 +1,198 @@
+"""Lock-discipline rules (LD) — serving-layer thread safety.
+
+The threaded serving stack (``launch/batching.py``) keeps its invariants
+by convention: fields mutated under ``self._lock`` are read under it
+too, worker threads are joined on close, and the queue sentinel that
+stops a worker is actually enqueued by the shutdown path. These rules
+make the conventions checkable per class:
+
+  LD001  a field that is ever *written* under a lock is read or written
+         outside any ``with self.<lock>`` block (outside ``__init__``,
+         which runs before the object escapes to other threads)
+  LD002  a class starts a ``threading.Thread`` it never ``join()``s
+  LD003  a stop sentinel is compared against in a worker loop but no
+         method ever enqueues it (shutdown would hang)
+
+LD001 is intentionally strict: even a GIL-atomic read outside the lock
+is flagged, because the guarded fields here participate in compound
+check-then-act protocols (closed-flag + sentinel ordering). Deliberate
+lock-free reads take an inline waiver with a justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.speclint.core import Finding, register
+from repro.analysis.speclint.jitgraph import ProjectIndex, ModuleInfo
+
+_LOCK_TYPES = {"threading.Lock", "threading.RLock", "threading.Condition"}
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _lock_attrs(mod: ModuleInfo, cls: ast.ClassDef) -> set[str]:
+    out = set()
+    for n in ast.walk(cls):
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+            if mod.resolve_node(n.value.func) in _LOCK_TYPES:
+                for t in n.targets:
+                    attr = _self_attr(t)
+                    if attr:
+                        out.add(attr)
+    return out
+
+
+def _under_lock_map(method: ast.FunctionDef,
+                    locks: set[str]) -> dict[int, bool]:
+    """id(node) -> is this node inside a `with self.<lock>` body?"""
+    under: dict[int, bool] = {}
+
+    def mark(node: ast.AST, flag: bool) -> None:
+        under[id(node)] = flag
+        if isinstance(node, ast.With) and any(
+                _self_attr(item.context_expr) in locks
+                for item in node.items):
+            for item in node.items:
+                mark(item, flag)
+            for s in node.body:
+                mark(s, True)
+            return
+        for child in ast.iter_child_nodes(node):
+            mark(child, flag)
+
+    mark(method, False)
+    return under
+
+
+@register("lock-discipline")
+def run(files, index: ProjectIndex):
+    out: list[Finding] = []
+    for mod in index.modules.values():
+        for node in mod.file.tree.body:
+            if isinstance(node, ast.ClassDef):
+                out.extend(_check_class(mod, node))
+    return out
+
+
+def _check_class(mod: ModuleInfo, cls: ast.ClassDef) -> list[Finding]:
+    out: list[Finding] = []
+    locks = _lock_attrs(mod, cls)
+    methods = [n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+    if locks:
+        guarded: set[str] = set()
+        maps = {m.name: _under_lock_map(m, locks) for m in methods}
+        for m in methods:
+            if m.name == "__init__":
+                continue
+            under = maps[m.name]
+            for n in ast.walk(m):
+                attr = None
+                if isinstance(n, (ast.Assign,)):
+                    for t in n.targets:
+                        attr = _self_attr(t)
+                        if attr and under.get(id(t)):
+                            guarded.add(attr)
+                elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+                    attr = _self_attr(n.target)
+                    if attr and under.get(id(n.target)):
+                        guarded.add(attr)
+        guarded -= locks
+        for m in methods:
+            if m.name == "__init__":
+                continue
+            under = maps[m.name]
+            for n in ast.walk(m):
+                attr = _self_attr(n)
+                if (attr in guarded and not under.get(id(n))
+                        and isinstance(n.ctx, (ast.Load, ast.Store,
+                                               ast.Del))):
+                    kind = ("write" if isinstance(n.ctx,
+                                                  (ast.Store, ast.Del))
+                            else "read")
+                    out.append(Finding(
+                        rule="LD001", path=mod.file.path, line=n.lineno,
+                        message=f"unguarded {kind} of `self.{attr}` — "
+                                f"field is mutated under the lock "
+                                f"elsewhere in {cls.name}",
+                        hint="wrap in `with self._lock:` or waive with "
+                             "the reason the lock-free access is safe",
+                        context=f"{mod.dotted}:{cls.name}.{m.name}"))
+
+    out.extend(_thread_lifecycle(mod, cls, methods))
+    out.extend(_sentinel_pairing(mod, cls, methods))
+    return out
+
+
+def _thread_lifecycle(mod: ModuleInfo, cls: ast.ClassDef,
+                      methods) -> list[Finding]:
+    thread_attrs: dict[str, int] = {}
+    for n in ast.walk(cls):
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+            if mod.resolve_node(n.value.func) == "threading.Thread":
+                for t in n.targets:
+                    attr = _self_attr(t)
+                    if attr:
+                        thread_attrs[attr] = n.lineno
+    out = []
+    for attr, lineno in thread_attrs.items():
+        started = joined = False
+        for n in ast.walk(cls):
+            if (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and _self_attr(n.func.value) == attr):
+                started |= n.func.attr == "start"
+                joined |= n.func.attr == "join"
+        if started and not joined:
+            out.append(Finding(
+                rule="LD002", path=mod.file.path, line=lineno,
+                message=f"{cls.name} starts thread `self.{attr}` but no "
+                        f"method ever join()s it",
+                hint="join the worker in close()/__exit__ so shutdown "
+                     "is deterministic and errors surface",
+                context=f"{mod.dotted}:{cls.name}"))
+    return out
+
+
+def _sentinel_pairing(mod: ModuleInfo, cls: ast.ClassDef,
+                      methods) -> list[Finding]:
+    sentinels = {n.targets[0].id: n.lineno for n in cls.body
+                 if isinstance(n, ast.Assign)
+                 and len(n.targets) == 1
+                 and isinstance(n.targets[0], ast.Name)
+                 and "stop" in n.targets[0].id.lower()}
+    out = []
+    for name, lineno in sentinels.items():
+        compared = enqueued = False
+        for n in ast.walk(cls):
+            if isinstance(n, ast.Compare) and any(
+                    isinstance(op, (ast.Is, ast.IsNot))
+                    for op in n.ops):
+                operands = [n.left] + list(n.comparators)
+                if any(_self_attr(o) == name or
+                       (isinstance(o, ast.Name) and o.id == name)
+                       for o in operands):
+                    compared = True
+            if (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr in ("put", "put_nowait", "append")):
+                if any(_self_attr(a) == name or
+                       (isinstance(a, ast.Name) and a.id == name)
+                       for a in n.args):
+                    enqueued = True
+        if compared and not enqueued:
+            out.append(Finding(
+                rule="LD003", path=mod.file.path, line=lineno,
+                message=f"worker loop checks sentinel `{name}` but no "
+                        f"method ever enqueues it — shutdown hangs",
+                hint="the close path must put the sentinel exactly once "
+                     "per worker",
+                context=f"{mod.dotted}:{cls.name}"))
+    return out

@@ -1,0 +1,265 @@
+"""Pallas kernel-contract rules (PK) — pallas_call structural checks.
+
+``pl.pallas_call`` fails late (or silently mis-tiles) when the grid,
+BlockSpecs, index maps and kernel body drift out of agreement. These
+rules check, per call site, everything that is visible statically:
+
+  PK001  BlockSpec index_map arity != grid rank
+  PK002  index_map returns a tuple of different rank than the block shape
+  PK003  pl.program_id(axis) with axis >= grid rank in the kernel body
+  PK004  in_specs/operand count mismatch, or out_specs/out_shape mismatch
+  PK005  grid floor-divides a length with no visible padding to a
+         multiple (remainder elements are silently never visited)
+
+PK005 is evidence-based: a ``… % tile`` pad computation or ``pl.cdiv``
+in the enclosing function counts as handling the remainder; kernels that
+deliberately require pre-tiled inputs should waive with a justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.speclint.core import Finding, register
+from repro.analysis.speclint.jitgraph import ProjectIndex, ModuleInfo
+
+_PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+_BLOCK_SPEC = "jax.experimental.pallas.BlockSpec"
+
+
+def _is_blockspec(mod: ModuleInfo, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    dn = mod.resolve_node(node.func)
+    return dn == _BLOCK_SPEC or (dn or "").endswith(".BlockSpec")
+
+
+def _grid_rank(grid: ast.AST | None) -> int | None:
+    if grid is None:
+        return 0
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    return None
+
+
+def _spec_parts(spec: ast.Call):
+    """(block_shape node | None, index_map node | None) of a BlockSpec."""
+    shape = spec.args[0] if spec.args else None
+    imap = spec.args[1] if len(spec.args) > 1 else None
+    for kw in spec.keywords:
+        if kw.arg == "index_map":
+            imap = kw.value
+        elif kw.arg == "block_shape":
+            shape = kw.value
+    return shape, imap
+
+
+def _effective_kws(mod: ModuleInfo, call: ast.Call,
+                   enclosing: ast.AST | None) -> tuple[dict, int]:
+    """pallas_call keywords with any grid_spec=GridSpec(...) /
+    PrefetchScalarGridSpec(...) inlined; returns (kws, n_scalar_prefetch).
+
+    Scalar-prefetch operands precede the in_specs operands and their
+    refs are appended to every index_map's signature, so the prefetch
+    count shifts both the operand-count and the index-map-arity checks.
+    """
+    kws = {kw.arg: kw.value for kw in call.keywords}
+    nsp = 0
+    spec = kws.pop("grid_spec", None)
+    if isinstance(spec, ast.Name) and enclosing is not None:
+        for n in ast.walk(enclosing):
+            if (isinstance(n, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == spec.id
+                            for t in n.targets)):
+                spec = n.value
+    if isinstance(spec, ast.Call):
+        for kw in spec.keywords:
+            if kw.arg == "num_scalar_prefetch":
+                if (isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, int)):
+                    nsp = kw.value.value
+            elif kw.arg in ("grid", "in_specs", "out_specs"):
+                kws.setdefault(kw.arg, kw.value)
+    return kws, nsp
+
+
+def _kernel_def(mod: ModuleInfo, enclosing: ast.AST | None,
+                kfn: ast.AST) -> ast.FunctionDef | None:
+    if isinstance(kfn, ast.Call):
+        dn = mod.resolve_node(kfn.func)
+        if dn == "functools.partial" and kfn.args:
+            kfn = kfn.args[0]
+    if not isinstance(kfn, ast.Name):
+        return None
+    if enclosing is not None:
+        for n in ast.walk(enclosing):
+            if isinstance(n, ast.FunctionDef) and n.name == kfn.id:
+                return n
+    info = mod.funcs.get(kfn.id)
+    return info.node if info else None
+
+
+def _has_pad_evidence(enclosing: ast.AST | None, divisor: str) -> bool:
+    """A `x % divisor` / `-x % divisor` pad computation, or pl.cdiv."""
+    if enclosing is None:
+        return False
+    for n in ast.walk(enclosing):
+        if (isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+                and ast.unparse(n.right) == divisor):
+            return True
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "cdiv"):
+            return True
+    return False
+
+
+@register("pallas-contract")
+def run(files, index: ProjectIndex):
+    out: list[Finding] = []
+    for mod in index.modules.values():
+        # Map every pallas_call to its enclosing top-level def (for the
+        # context string and the padding-evidence scan).
+        encl: dict[int, tuple[str, ast.AST]] = {}
+        for qual, info in mod.funcs.items():
+            for n in ast.walk(info.node):
+                encl[id(n)] = (qual, info.node)
+        for node in ast.walk(mod.file.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = mod.resolve_node(node.func)
+            if dn != _PALLAS_CALL:
+                continue
+            qual, encl_node = encl.get(id(node), ("<module>", None))
+            out.extend(_check_site(mod, node, qual, encl_node))
+        out.extend(_check_operand_counts(mod, encl))
+    return out
+
+
+def _check_site(mod: ModuleInfo, call: ast.Call, qual: str,
+                enclosing: ast.AST | None) -> list[Finding]:
+    out: list[Finding] = []
+    ctx = f"{mod.dotted}:{qual}"
+    kws, nsp = _effective_kws(mod, call, enclosing)
+    rank = _grid_rank(kws.get("grid"))
+
+    specs: list[ast.Call] = []
+    for key in ("in_specs", "out_specs"):
+        v = kws.get(key)
+        if isinstance(v, (ast.List, ast.Tuple)):
+            specs += [s for s in v.elts if _is_blockspec(mod, s)]
+        elif v is not None and _is_blockspec(mod, v):
+            specs.append(v)
+
+    for spec in specs:
+        shape, imap = _spec_parts(spec)
+        if isinstance(imap, ast.Lambda) and rank is not None:
+            n_args = len(imap.args.args)
+            expected = rank + nsp
+            if n_args != expected:
+                out.append(Finding(
+                    rule="PK001", path=mod.file.path, line=spec.lineno,
+                    message=f"BlockSpec index_map takes {n_args} args "
+                            f"but the grid has rank {rank}"
+                            + (f" (+{nsp} scalar-prefetch refs)"
+                               if nsp else ""),
+                    hint="index_map receives one program index per grid "
+                         "axis — align its arity with the grid",
+                    context=ctx))
+            if (isinstance(imap.body, ast.Tuple)
+                    and isinstance(shape, (ast.Tuple, ast.List))
+                    and len(imap.body.elts) != len(shape.elts)):
+                out.append(Finding(
+                    rule="PK002", path=mod.file.path, line=spec.lineno,
+                    message=f"index_map returns "
+                            f"{len(imap.body.elts)} block indices for a "
+                            f"rank-{len(shape.elts)} block shape",
+                    hint="return exactly one block index per block-shape "
+                         "dimension",
+                    context=ctx))
+
+    # PK003: program_id axes used by the kernel body vs grid rank.
+    kdef = _kernel_def(mod, enclosing, call.args[0]) if call.args else None
+    if kdef is not None and rank is not None:
+        for n in ast.walk(kdef):
+            if (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "program_id" and n.args
+                    and isinstance(n.args[0], ast.Constant)
+                    and isinstance(n.args[0].value, int)
+                    and n.args[0].value >= rank):
+                out.append(Finding(
+                    rule="PK003", path=mod.file.path, line=n.lineno,
+                    message=f"pl.program_id({n.args[0].value}) in kernel "
+                            f"'{kdef.name}' but the grid has rank {rank}",
+                    hint="program_id axes must be < len(grid)",
+                    context=ctx))
+
+    # PK004 (out half): out_specs vs out_shape cardinality.
+    outs, oshape = kws.get("out_specs"), kws.get("out_shape")
+    if (isinstance(outs, (ast.List, ast.Tuple))
+            and isinstance(oshape, (ast.List, ast.Tuple))
+            and len(outs.elts) != len(oshape.elts)):
+        out.append(Finding(
+            rule="PK004", path=mod.file.path, line=call.lineno,
+            message=f"{len(outs.elts)} out_specs for "
+                    f"{len(oshape.elts)} out_shape entries",
+            hint="one BlockSpec per output",
+            context=ctx))
+
+    # PK005: grid derived by floor-division needs padding evidence.
+    grid = kws.get("grid")
+    if grid is not None:
+        elts = (grid.elts if isinstance(grid, (ast.Tuple, ast.List))
+                else [grid])
+        for g in elts:
+            for n in ast.walk(g):
+                if (isinstance(n, ast.BinOp)
+                        and isinstance(n.op, ast.FloorDiv)):
+                    div = ast.unparse(n.right)
+                    if not _has_pad_evidence(enclosing, div):
+                        out.append(Finding(
+                            rule="PK005", path=mod.file.path,
+                            line=call.lineno,
+                            message=f"grid floor-divides by {div} with "
+                                    f"no visible pad to a multiple — "
+                                    f"remainder elements are never "
+                                    f"visited",
+                            hint=f"pad the operand ( -(n) % {div} ) or "
+                                 f"use pl.cdiv plus masking; waive if "
+                                 f"inputs are pre-tiled by contract",
+                            context=ctx))
+    return out
+
+
+def _check_operand_counts(mod: ModuleInfo, encl) -> list[Finding]:
+    """PK004 (in half): `pl.pallas_call(...)` immediately called with a
+    different number of operands than in_specs declares."""
+    out: list[Finding] = []
+    for node in ast.walk(mod.file.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Call)):
+            continue
+        inner = node.func
+        if mod.resolve_node(inner.func) != _PALLAS_CALL:
+            continue
+        qual, encl_node = encl.get(id(node), ("<module>", None))
+        kws, nsp = _effective_kws(mod, inner, encl_node)
+        in_specs = kws.get("in_specs")
+        if not isinstance(in_specs, (ast.List, ast.Tuple)):
+            continue
+        if any(isinstance(a, ast.Starred) for a in node.args):
+            continue
+        expected = len(in_specs.elts) + nsp
+        if len(node.args) != expected:
+            out.append(Finding(
+                rule="PK004", path=mod.file.path, line=node.lineno,
+                message=f"pallas_call declares {len(in_specs.elts)} "
+                        f"in_specs"
+                        + (f" (+{nsp} scalar-prefetch)" if nsp else "")
+                        + f" but is invoked with {len(node.args)} "
+                          f"operands",
+                hint="one BlockSpec per operand, in order "
+                     "(scalar-prefetch operands come first)",
+                context=f"{mod.dotted}:{qual}"))
+    return out

@@ -1,0 +1,72 @@
+"""Scatter-mode rules (SG) — explicit `.at[...]` out-of-bounds modes.
+
+Inside jit, ``x.at[idx].set/add/...`` silently applies jax's default
+out-of-bounds policy (drop for scatters). The refill executor *depends*
+on that policy — finished lanes scatter to index M to discard — so the
+engine's invariant is that every dynamic scatter states its mode
+explicitly (``mode="drop"`` where the drop is load-bearing,
+``mode="promise_in_bounds"`` where indices are proven in range). An
+implicit default reads as an oversight and breaks loudly on backends
+with different clamping behavior.
+
+  SG001  `.at[dynamic_idx].set/add/max/min/mul(...)` without `mode=`
+         in jit-reachable code
+
+Literal constant indices (``.at[0].set(...)``) are exempt: they are
+statically in bounds and carry no policy ambiguity.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.speclint.core import Finding, register
+from repro.analysis.speclint.jitgraph import ProjectIndex
+
+_SCATTER_METHODS = {"set", "add", "max", "min", "mul", "multiply",
+                    "divide", "power", "apply"}
+
+
+def _is_constant_index(idx: ast.AST) -> bool:
+    if isinstance(idx, ast.Constant):
+        return True
+    if isinstance(idx, ast.UnaryOp) and isinstance(idx.operand,
+                                                   ast.Constant):
+        return True
+    if isinstance(idx, ast.Slice):
+        return all(x is None or _is_constant_index(x)
+                   for x in (idx.lower, idx.upper, idx.step))
+    if isinstance(idx, ast.Tuple):
+        return all(_is_constant_index(e) for e in idx.elts)
+    return False
+
+
+@register("scatter-mode")
+def run(files, index: ProjectIndex):
+    out: list[Finding] = []
+    for mod in index.modules.values():
+        for info in mod.funcs.values():
+            if not index.is_traced(mod.dotted, info.qual):
+                continue
+            for node in ast.walk(info.node):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _SCATTER_METHODS):
+                    continue
+                sub = node.func.value
+                if not (isinstance(sub, ast.Subscript)
+                        and isinstance(sub.value, ast.Attribute)
+                        and sub.value.attr == "at"):
+                    continue
+                if _is_constant_index(sub.slice):
+                    continue
+                if any(kw.arg == "mode" for kw in node.keywords):
+                    continue
+                out.append(Finding(
+                    rule="SG001", path=mod.file.path, line=node.lineno,
+                    message=f"dynamic `.at[...].{node.func.attr}` "
+                            f"without an explicit mode=",
+                    hint='state the out-of-bounds policy: mode="drop" '
+                         '(discard OOB updates — the refill-executor '
+                         'idiom) or mode="promise_in_bounds"',
+                    context=f"{info.module}:{info.qual}"))
+    return out

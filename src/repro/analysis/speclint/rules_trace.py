@@ -1,0 +1,403 @@
+"""Trace-safety rules (TS) — Python control flow on traced values.
+
+Everything reachable from a jit/while_loop/vmap body executes at TRACE
+time: a Python ``if``/``while``/``assert`` on a traced array raises
+``TracerBoolConversionError`` (or worse, silently bakes in one branch
+when the value is concrete at trace time and traced later). These rules
+run a light intraprocedural taint analysis over every function in the
+jit-reachability set:
+
+* a parameter is traced unless its annotation is host-static (``int``,
+  ``bool``, …, or a non-pytree config dataclass) or it is listed in the
+  enclosing jit's ``static_argnames``;
+* ``jnp.*``/``jax.*`` calls produce traced values; ``.shape``/
+  ``.ndim``/``.dtype`` and ``len()`` of a traced value are static.
+
+Rules:
+  TS001  Python ``if``/``while``/ternary on a traced value
+  TS002  ``assert`` on a traced value
+  TS003  host-side call under trace (``float()``/``int()``/``bool()``,
+         ``.item()``/``.tolist()``, ``np.*``, ``print``)
+  TS004  ``lax.cond`` branches / ``while_loop`` body-vs-init returning
+         pytrees of visibly different structure (carry instability)
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.speclint.core import Finding, register, qualname_of
+from repro.analysis.speclint.jitgraph import (ProjectIndex, ModuleInfo,
+                                              FuncInfo, STATIC_ANNOTATIONS)
+
+# Attributes of a traced array that are static python values.
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "device",
+                 "weak_type", "aval"}
+# Builtins whose result is host-static regardless of arguments.
+_ALWAYS_HOST = {"len", "isinstance", "issubclass", "hasattr", "range",
+                "type", "id", "repr", "str"}
+_HOST_CASTS = {"int", "float", "bool", "complex"}
+_HOST_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+def _is_static_param(index: ProjectIndex, mod: ModuleInfo, info: FuncInfo,
+                     name: str) -> bool:
+    if name == "self":
+        return True
+    if info.static_argnames and name in info.static_argnames:
+        return True
+    ann = info.annotations.get(name)
+    if ann is None:
+        return False
+    leaf = ann.split(".")[-1]
+    if ann in STATIC_ANNOTATIONS or leaf in STATIC_ANNOTATIONS:
+        return True
+    ci = index.lookup_class(mod, ann)
+    if ci is not None and ci.is_dataclass and not ci.pytree:
+        return True  # config-style dataclass: hashable host object
+    return False
+
+
+class _TaintWalker:
+    """Single-function forward taint pass + TS rule checks.
+
+    Union-only propagation (a name once traced stays traced) over two
+    sweeps, so loop-carried rebindings converge; findings are emitted on
+    the final sweep only.
+    """
+
+    def __init__(self, index: ProjectIndex, mod: ModuleInfo,
+                 info: FuncInfo):
+        self.index = index
+        self.mod = mod
+        self.info = info
+        self.findings: list[Finding] = []
+
+    # ------------------------------------------------------------ taint
+    def tainted_expr(self, node: ast.AST, env: set[str]) -> bool:
+        t = self.tainted_expr
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in env
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return t(node.value, env)
+        if isinstance(node, ast.Subscript):
+            return t(node.value, env) or t(node.slice, env)
+        if isinstance(node, ast.Call):
+            return self._tainted_call(node, env)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is a static trace-time test
+            # even on a traced name (the standard optional-arg idiom).
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                operands = [node.left] + list(node.comparators)
+                if any(isinstance(o, ast.Constant) and o.value is None
+                       for o in operands):
+                    return False
+            return t(node.left, env) or any(
+                t(c, env) for c in node.comparators)
+        if isinstance(node, (ast.BinOp,)):
+            return t(node.left, env) or t(node.right, env)
+        if isinstance(node, ast.UnaryOp):
+            return t(node.operand, env)
+        if isinstance(node, ast.BoolOp):
+            return any(t(v, env) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return t(node.test, env) or t(node.body, env) or t(
+                node.orelse, env)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(t(e, env) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(t(v, env) for v in node.values if v is not None)
+        if isinstance(node, ast.Starred):
+            return t(node.value, env)
+        if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+            return False
+        if isinstance(node, ast.Slice):
+            return any(t(x, env) for x in
+                       (node.lower, node.upper, node.step) if x)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return any(t(gen.iter, env) for gen in node.generators)
+        if isinstance(node, ast.JoinedStr):
+            return False
+        if isinstance(node, ast.NamedExpr):
+            return t(node.value, env)
+        return False
+
+    def _tainted_call(self, node: ast.Call, env: set[str]) -> bool:
+        t = self.tainted_expr
+        args_tainted = any(t(a, env) for a in node.args) or any(
+            t(kw.value, env) for kw in node.keywords)
+        fn = node.func
+        dn = self.mod.resolve_node(fn)
+        if dn:
+            if dn in _ALWAYS_HOST:
+                return False
+            if dn in _HOST_CASTS:
+                return False          # host scalar (TS003 flags the call)
+            if dn.startswith(("jax.numpy.", "jax.")) or dn in (
+                    "jax", "jax.numpy"):
+                return True           # array producer
+            if dn.startswith("numpy."):
+                return False          # host-side numpy (TS003 territory)
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in _HOST_METHODS:
+                return False
+            return t(fn.value, env) or args_tainted
+        if isinstance(fn, ast.Call):  # e.g. jax.vmap(f)(xs)
+            return t(fn, env) or args_tainted
+        return args_tainted
+
+    # ---------------------------------------------------------- statements
+    def _bind(self, target: ast.AST, tainted: bool, env: set[str]) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                env.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind(el, tainted, env)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted, env)
+
+    def run(self) -> list[Finding]:
+        env: set[str] = set()
+        for p in self.info.params:
+            if not _is_static_param(self.index, self.mod, self.info, p):
+                env.add(p)
+        body = self.info.node.body
+        self._sweep(body, env, emit=False)
+        self._sweep(body, env, emit=False)
+        self._sweep(body, env, emit=True)
+        return self.findings
+
+    def _sweep(self, body: list[ast.stmt], env: set[str],
+               emit: bool) -> None:
+        for stmt in body:
+            self._stmt(stmt, env, emit)
+
+    def _stmt(self, stmt: ast.stmt, env: set[str], emit: bool) -> None:
+        t = self.tainted_expr
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Nested def: closure params default to traced (vmap/loop
+            # bodies) unless annotated static; outer env is inherited.
+            inner = set(env)
+            nested = FuncInfo(
+                module=self.info.module,
+                qual=f"{self.info.qual}.{stmt.name}", node=stmt,
+                path=self.info.path,
+                params=tuple(a.arg for a in stmt.args.args),
+                annotations={
+                    a.arg: None if a.annotation is None else
+                    self.mod.resolve(ast.unparse(a.annotation))
+                    for a in stmt.args.args})
+            for p in nested.params:
+                if not _is_static_param(self.index, self.mod, nested, p):
+                    inner.add(p)
+            sub = _TaintWalker(self.index, self.mod, nested)
+            sub.findings = self.findings if emit else []
+            sub._sweep(stmt.body, inner, emit=False)
+            sub._sweep(stmt.body, inner, emit=emit)
+            return
+        if isinstance(stmt, ast.Assign):
+            tainted = t(stmt.value, env)
+            for tgt in stmt.targets:
+                self._bind(tgt, tainted, env)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind(stmt.target, t(stmt.value, env), env)
+        elif isinstance(stmt, ast.AugAssign):
+            if t(stmt.value, env):
+                self._bind(stmt.target, True, env)
+        elif isinstance(stmt, ast.If):
+            if emit and t(stmt.test, env):
+                self._emit("TS001", stmt,
+                           "Python `if` on a traced value inside "
+                           "jit-reachable code",
+                           "use jnp.where / lax.cond, or make the value "
+                           "static (shape, config, static_argnames)")
+            self._sweep(stmt.body, env, emit)
+            self._sweep(stmt.orelse, env, emit)
+        elif isinstance(stmt, ast.While):
+            if emit and t(stmt.test, env):
+                self._emit("TS001", stmt,
+                           "Python `while` on a traced value inside "
+                           "jit-reachable code",
+                           "use lax.while_loop with a traced condition")
+            self._sweep(stmt.body, env, emit)
+            self._sweep(stmt.orelse, env, emit)
+        elif isinstance(stmt, ast.Assert):
+            if emit and t(stmt.test, env):
+                self._emit("TS002", stmt,
+                           "`assert` on a traced value (trace-time no-op "
+                           "or TracerBoolConversionError)",
+                           "use checkify / debug.check, or assert on "
+                           "static shape facts only")
+        elif isinstance(stmt, ast.For):
+            self._bind(stmt.target, t(stmt.iter, env), env)
+            self._sweep(stmt.body, env, emit)
+            self._sweep(stmt.orelse, env, emit)
+        elif isinstance(stmt, ast.With):
+            self._sweep(stmt.body, env, emit)
+        elif isinstance(stmt, (ast.Try,)):
+            self._sweep(stmt.body, env, emit)
+            for h in stmt.handlers:
+                self._sweep(h.body, env, emit)
+            self._sweep(stmt.finalbody, env, emit)
+        # Expression-level checks (ternaries, host calls) over THIS
+        # statement's own expressions only — child statements are checked
+        # by their own _stmt calls.
+        if emit:
+            for root in _exprs_of(stmt):
+                for node in ast.walk(root):
+                    if isinstance(node, ast.IfExp) and t(node.test, env):
+                        self._emit("TS001", node,
+                                   "ternary on a traced value inside "
+                                   "jit-reachable code",
+                                   "use jnp.where(test, a, b)")
+                    elif isinstance(node, ast.Call):
+                        self._host_call_check(node, env)
+
+    def _host_call_check(self, node: ast.Call, env: set[str]) -> None:
+        t = self.tainted_expr
+        dn = self.mod.resolve_node(node.func)
+        args_tainted = any(t(a, env) for a in node.args)
+        if dn in _HOST_CASTS and args_tainted:
+            self._emit("TS003", node,
+                       f"host cast `{dn}()` of a traced value under trace",
+                       "keep the value on device (.astype) or hoist the "
+                       "cast out of the jit boundary")
+        elif dn and dn.startswith("numpy.") and args_tainted:
+            self._emit("TS003", node,
+                       f"host-side `{dn}` call on a traced value",
+                       "use the jnp equivalent inside traced code")
+        elif dn == "print" and args_tainted:
+            self._emit("TS003", node,
+                       "`print` of a traced value runs at trace time only",
+                       "use jax.debug.print for runtime values")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in ("item", "tolist")
+              and t(node.func.value, env)):
+            self._emit("TS003", node,
+                       f"`.{node.func.attr}()` forces a host sync under "
+                       "trace (TracerError)",
+                       "return the array and materialize outside jit")
+
+    def _emit(self, rule: str, node: ast.AST, msg: str, hint: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.info.path, line=node.lineno,
+            message=msg, hint=hint,
+            context=f"{self.info.module}:{self.info.qual}"))
+
+
+def _exprs_of(stmt: ast.stmt) -> list[ast.AST]:
+    """Direct expression roots of a statement (no child statements)."""
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value]
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.Return,
+                         ast.Expr)):
+        return [stmt.value] if stmt.value is not None else []
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, ast.For):
+        return [stmt.iter]
+    if isinstance(stmt, ast.Assert):
+        return [stmt.test]
+    if isinstance(stmt, ast.With):
+        return [it.context_expr for it in stmt.items]
+    if isinstance(stmt, ast.Raise):
+        return [x for x in (stmt.exc, stmt.cause) if x is not None]
+    return []
+
+
+def _return_structure(fn: ast.AST, mod: ModuleInfo):
+    """('tuple', n) / ('ctor', Name) / None for a branch callable."""
+    if isinstance(fn, ast.Lambda):
+        body = fn.body
+    elif isinstance(fn, ast.FunctionDef):
+        rets = [n for n in ast.walk(fn) if isinstance(n, ast.Return)
+                and n.value is not None]
+        if not rets:
+            return None
+        body = rets[-1].value
+    else:
+        return None
+    if isinstance(body, ast.Tuple):
+        return ("tuple", len(body.elts))
+    if isinstance(body, ast.Call):
+        dn = mod.resolve_node(body.func)
+        leaf = dn.split(".")[-1] if dn else None
+        # Only known classes count as constructors — a helper-function
+        # call has an unknown return structure, not a mismatch.
+        if leaf and leaf in mod.classes:
+            return ("ctor", leaf)
+    return None
+
+
+def _local_defs(root: ast.AST) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in ast.walk(root)
+            if isinstance(n, ast.FunctionDef)}
+
+
+@register("trace-safety")
+def run(files, index: ProjectIndex):
+    out: list[Finding] = []
+    for mod in index.modules.values():
+        for info in mod.funcs.values():
+            if not index.is_traced(mod.dotted, info.qual):
+                continue
+            out.extend(_TaintWalker(index, mod, info).run())
+            out.extend(_carry_stability(mod, info))
+    return out
+
+
+def _carry_stability(mod: ModuleInfo, info: FuncInfo) -> list[Finding]:
+    """TS004: visible pytree-structure mismatches in lax control flow."""
+    out: list[Finding] = []
+    defs = _local_defs(info.node)
+    defs.update({q: f.node for q, f in mod.funcs.items() if "." not in q})
+
+    def resolve_callable(node: ast.AST):
+        if isinstance(node, ast.Lambda):
+            return node
+        if isinstance(node, ast.Name):
+            return defs.get(node.id)
+        return None
+
+    for node in ast.walk(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = mod.resolve_node(node.func)
+        if dn == "jax.lax.cond" and len(node.args) >= 3:
+            s_true = _return_structure(
+                resolve_callable(node.args[1]) or ast.Pass(), mod)
+            s_false = _return_structure(
+                resolve_callable(node.args[2]) or ast.Pass(), mod)
+            if s_true and s_false and s_true != s_false:
+                out.append(Finding(
+                    rule="TS004", path=info.path, line=node.lineno,
+                    message=f"lax.cond branches return different pytree "
+                            f"structures ({s_true} vs {s_false})",
+                    hint="both branches must return identical "
+                         "shape/dtype/structure; pad or select instead",
+                    context=f"{info.module}:{info.qual}"))
+        elif dn == "jax.lax.while_loop" and len(node.args) >= 3:
+            s_body = _return_structure(
+                resolve_callable(node.args[1]) or ast.Pass(), mod)
+            init = node.args[2]
+            s_init = None
+            if isinstance(init, ast.Tuple):
+                s_init = ("tuple", len(init.elts))
+            elif isinstance(init, ast.Call):
+                dn_init = mod.resolve_node(init.func)
+                leaf = dn_init.split(".")[-1] if dn_init else None
+                if leaf and leaf in mod.classes:
+                    s_init = ("ctor", leaf)
+            if s_body and s_init and s_body != s_init:
+                out.append(Finding(
+                    rule="TS004", path=info.path, line=node.lineno,
+                    message=f"lax.while_loop body returns {s_body} but "
+                            f"init carry is {s_init}",
+                    hint="the carry pytree must be structure- and "
+                         "shape-stable across iterations",
+                    context=f"{info.module}:{info.qual}"))
+    return out

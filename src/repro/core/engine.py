@@ -565,8 +565,8 @@ def naive_full_scan(store: TripleStore, relax: RelaxTable,
             sc = store.scores[src_ids[r]] * weights[r]
             ok = (keys != PAD_KEY) & src_ok[r]
             idx = jnp.where(ok, keys, 0)
-            best = best.at[idx].max(jnp.where(ok, sc, NEG_INF))
-            present = present.at[idx].max(ok)
+            best = best.at[idx].max(jnp.where(ok, sc, NEG_INF), mode="drop")
+            present = present.at[idx].max(ok, mode="drop")
             return (best, present), None
 
         (best, present), _ = jax.lax.scan(

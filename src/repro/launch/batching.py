@@ -155,9 +155,15 @@ class BatchExecutor:
         # Recent-batch records, bounded so a long-lived server does not
         # grow without bound; aggregate metrics use the running totals
         # below, which cover every batch ever served since reset_stats().
+        # All of them are mutated from more than one thread — the
+        # pipelined planner thread bumps plan_total_s while the main
+        # thread records the previous group, and a MicroBatcher worker
+        # records batches while callers poll wasted_fraction() — so every
+        # access goes through _lock (speclint LD001 enforces this).
+        self._lock = threading.Lock()
         self.stats: list[BatchStats] = []
         self.stats_cap = 4096
-        self.plan_total_s = 0.0   # plan-phase wall time (offline pipeline)
+        self._plan_total_s = 0.0  # plan-phase wall time (offline pipeline)
         self._useful_total = 0
         self._wasted_total = 0
         # Host-side copies for the work scheduler (batch composition).
@@ -165,10 +171,17 @@ class BatchExecutor:
         self._rel_ids = np.asarray(relax.ids)
 
     def reset_stats(self) -> None:
-        self.stats.clear()
-        self.plan_total_s = 0.0
-        self._useful_total = 0
-        self._wasted_total = 0
+        with self._lock:
+            self.stats.clear()
+            self._plan_total_s = 0.0
+            self._useful_total = 0
+            self._wasted_total = 0
+
+    @property
+    def plan_total_s(self) -> float:
+        """Plan-phase wall time since reset_stats() (thread-safe read)."""
+        with self._lock:
+            return self._plan_total_s
 
     def _t_bucket(self, t: int) -> int:
         if self.bcfg.t_buckets is not None:
@@ -259,7 +272,10 @@ class BatchExecutor:
                                         self.cfg, self.mode)
         masks = np.asarray(masks)
         dt = time.perf_counter() - t0
-        self.plan_total_s += dt
+        # plan_group runs on the planner thread when pipelining — the
+        # bare `+=` here used to race _finish_batch on the main thread.
+        with self._lock:
+            self._plan_total_s += dt
         return [masks[i] for i in range(len(group))], dt
 
     def planned_work(self, q: np.ndarray, mask: np.ndarray) -> int:
@@ -310,14 +326,15 @@ class BatchExecutor:
         useful = int(n_iters[:len(group)].sum())
         if wasted is None:
             wasted = int(n_wasted[:len(group)].sum())
-        self._useful_total += useful
-        self._wasted_total += wasted
-        self.stats.append(BatchStats(
-            n_requests=len(group), q_bucket=q_b, t_bucket=t_b, exec_s=dt,
-            n_iters=trips, useful_iters=useful,
-            wasted_iters=wasted, plan_s=plan_s))
-        if len(self.stats) > self.stats_cap:
-            del self.stats[:-self.stats_cap]
+        with self._lock:
+            self._useful_total += useful
+            self._wasted_total += wasted
+            self.stats.append(BatchStats(
+                n_requests=len(group), q_bucket=q_b, t_bucket=t_b,
+                exec_s=dt, n_iters=trips, useful_iters=useful,
+                wasted_iters=wasted, plan_s=plan_s))
+            if len(self.stats) > self.stats_cap:
+                del self.stats[:-self.stats_cap]
         return out
 
     def run_batch(self, group: list[np.ndarray],
@@ -497,8 +514,9 @@ class BatchExecutor:
     def wasted_fraction(self) -> float:
         """Fraction of real-lane lockstep trips spent frozen, since the
         last ``reset_stats()`` (running totals — O(1), unbounded window)."""
-        return self._wasted_total / max(
-            self._useful_total + self._wasted_total, 1)
+        with self._lock:
+            return self._wasted_total / max(
+                self._useful_total + self._wasted_total, 1)
 
 
 class MicroBatcher:

@@ -249,6 +249,52 @@ def test_microbatcher_close_drains_pending():
     assert late.done() and isinstance(late.exception(), RuntimeError)
 
 
+def test_executor_stats_consistent_under_concurrency():
+    """The stats counters survive the threads that actually touch them:
+    a pipelined run (planner thread bumps plan_total_s while the main
+    thread records batches) with a reader thread polling the aggregate
+    views throughout. Afterwards the running totals must equal the
+    per-batch records exactly — the read-modify-write races speclint's
+    LD001 guards against would show up here as drift. (Regression:
+    plan_total_s was bumped without the lock from the planner thread.)"""
+    import threading
+
+    wl = small_workload(seed=0, n_queries=8)
+    queries = [np.asarray(q) for q in wl.queries]
+    pcfg = batching.BatchingConfig(max_batch=4, max_wait_s=0.01,
+                                   q_buckets=(1, 4), t_buckets=(2, 3),
+                                   pipeline=True)
+    ex = batching.BatchExecutor(wl.store, wl.relax, CFG, "specqp", pcfg)
+    errs, stop = [], threading.Event()
+
+    def poller():
+        try:
+            while not stop.is_set():
+                assert 0.0 <= ex.wasted_fraction() <= 1.0
+                assert ex.plan_total_s >= 0.0
+        except Exception as e:  # noqa: BLE001 — surface on the main thread
+            errs.append(e)
+
+    th = threading.Thread(target=poller)
+    th.start()
+    try:
+        results = ex.run(queries)
+    finally:
+        stop.set()
+        th.join()
+    assert not errs, errs
+    # Pipelined == sequential, still.
+    for r, s in zip(results, _singles(wl, range(len(queries)), "specqp")):
+        np.testing.assert_array_equal(r.keys, np.asarray(s.keys))
+        np.testing.assert_array_equal(r.scores, np.asarray(s.scores))
+    # Running totals agree exactly with the per-batch records.
+    assert ex._useful_total == sum(s.useful_iters for s in ex.stats)
+    assert ex._wasted_total == sum(s.wasted_iters for s in ex.stats)
+    assert ex.plan_total_s > 0.0   # planner thread's time was not lost
+    ex.reset_stats()
+    assert ex.plan_total_s == 0.0 and ex.wasted_fraction() == 0.0
+
+
 def test_bucket_helpers():
     assert batching.bucket_for(1, (1, 4, 16)) == 1
     assert batching.bucket_for(5, (1, 4, 16)) == 16

@@ -1,0 +1,234 @@
+"""speclint self-tests: seeded violations per rule family, waiver and
+baseline mechanics, and the invariants the linter exists to guard —
+config hashability (no retrace on equal static configs) and the Pallas
+rank_join contract (PK rules clean + interpret-mode differential on a
+non-tile-multiple input, the shape PK005 polices).
+
+The final test runs the linter over the real tree with the checked-in
+baseline, which is what CI's speclint step asserts too: exit 0, no
+unjustified waivers.
+"""
+import functools
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.speclint import lint_paths, main
+from repro.core.types import EngineConfig
+from repro.launch.batching import BatchingConfig
+from repro.kernels import ref, rank_join
+
+REPO = Path(__file__).resolve().parent.parent
+
+# --- seeded violations: one representative per rule family -----------------
+
+SEEDS = {
+    "TS001": """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """,
+    "TS002": """
+        import jax
+
+        @jax.jit
+        def f(x):
+            assert x.sum() > 0
+            return x
+        """,
+    "JB001": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("cfgg",))
+        def h(x, cfg):
+            return x
+        """,
+    "PK001": """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _k(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                _k, grid=(4, 4),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i, j: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), jnp.float32))(x)
+        """,
+    "LD001": """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+
+            def inc(self):
+                with self._lock:
+                    self.n += 1
+
+            def read(self):
+                return self.n
+        """,
+    "SG001": """
+        import jax
+
+        @jax.jit
+        def g(x, idx):
+            return x.at[idx].set(1.0)
+        """,
+}
+
+
+def _write(tmp_path, code, name="snippet.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(code))
+    return str(p)
+
+
+@pytest.mark.parametrize("rule", sorted(SEEDS))
+def test_seeded_violation_fires(tmp_path, rule):
+    """Each family's representative violation is found, and only it."""
+    path = _write(tmp_path, SEEDS[rule])
+    findings = lint_paths([path])
+    assert [f.rule for f in findings] == [rule]
+    assert findings[0].line > 0 and findings[0].hint
+
+
+@pytest.mark.parametrize("rule", sorted(SEEDS))
+def test_seeded_violation_fails_cli(tmp_path, rule):
+    """The CLI exits non-zero on every seeded family violation."""
+    path = _write(tmp_path, SEEDS[rule])
+    assert main([path, "--no-baseline"]) == 1
+
+
+def test_clean_file_passes(tmp_path):
+    path = _write(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return jnp.where(x > 0, x, -x)
+        """)
+    assert lint_paths([path]) == []
+    assert main([path, "--no-baseline"]) == 0
+
+
+def test_inline_waiver_with_justification(tmp_path):
+    path = _write(tmp_path, """
+        import jax
+
+        @jax.jit
+        def g(x, idx):
+            # speclint: waive[SG001] idx is clipped in-bounds by caller
+            return x.at[idx].set(1.0)
+        """)
+    assert lint_paths([path]) == []
+    assert main([path, "--no-baseline"]) == 0
+
+
+def test_inline_waiver_without_reason_is_rejected(tmp_path):
+    path = _write(tmp_path, """
+        import jax
+
+        @jax.jit
+        def g(x, idx):
+            # speclint: waive[SG001]
+            return x.at[idx].set(1.0)
+        """)
+    rules = {f.rule for f in lint_paths([path])}
+    assert "WV001" in rules          # reasonless waiver is itself flagged
+    assert main([path, "--no-baseline"]) == 1
+
+
+def test_baseline_roundtrip(tmp_path):
+    """--update-baseline silences a finding only once justified (WV002)."""
+    path = _write(tmp_path, SEEDS["SG001"])
+    base = tmp_path / "base.json"
+    assert main([path, "--update-baseline", "--baseline", str(base)]) == 0
+    # TODO justification still fails, as WV002.
+    assert main([path, "--baseline", str(base)]) == 1
+    base.write_text(base.read_text().replace(
+        "TODO: justify or fix", "idx proven in-bounds by test_foo"))
+    assert main([path, "--baseline", str(base)]) == 0
+    # Editing the flagged line invalidates the fingerprint: finding is new.
+    src = Path(path).read_text()
+    Path(path).write_text(src.replace(".set(1.0)", ".set(2.0)"))
+    assert main([path, "--baseline", str(base)]) == 1
+
+
+# --- the invariants behind the rules ---------------------------------------
+
+def test_static_configs_hashable_and_equal():
+    """JB002's premise: both config types are frozen, hashable, and
+    value-equal across distinct instances (valid jit cache keys)."""
+    for a, b in ((EngineConfig(block=16, k=5, grid_bins=96),
+                  EngineConfig(block=16, k=5, grid_bins=96)),
+                 (BatchingConfig(max_batch=8),
+                  BatchingConfig(max_batch=8))):
+        assert a is not b
+        assert a == b and hash(a) == hash(b)
+
+
+def test_equal_static_configs_do_not_retrace():
+    """Two equal-but-distinct EngineConfig instances as a static arg hit
+    the same jit specialization — one trace, not two."""
+    traces = []
+
+    @functools.partial(jax.jit, static_argnames=("cfg",))
+    def probe(x, cfg):
+        traces.append(1)      # runs at trace time only
+        return x * cfg.k
+
+    x = jnp.ones((4,), jnp.float32)
+    probe(x, EngineConfig(block=16, k=5, grid_bins=96))
+    probe(x, EngineConfig(block=16, k=5, grid_bins=96))
+    assert len(traces) == 1, "equal static configs retraced"
+
+
+def test_rank_join_pk_rules_clean_and_differential():
+    """PK family is clean on the kernels package, and the contract it
+    checks holds at runtime: interpret-mode rank_join matches the ref
+    oracle on an N that is NOT a tile multiple (the remainder case
+    PK005's padding-evidence requirement exists for)."""
+    findings = lint_paths([str(REPO / "src/repro/kernels")],
+                          select={"PK"})
+    assert findings == [], [str(f) for f in findings]
+
+    rng = np.random.default_rng(7)
+    N, B, tile = 700, 32, 256          # 700 % 256 != 0
+    keys = rng.choice(10000, N, replace=False).astype(np.int32)
+    cnt = np.int32(520)
+    keys[cnt:] = -1
+    scores = rng.random(N).astype(np.float32)
+    probes = np.concatenate([rng.choice(keys[:cnt], B // 2),
+                             rng.choice(20000, B - B // 2)]).astype(np.int32)
+    got = rank_join.rank_join_lookup(
+        jnp.asarray(keys), jnp.asarray(scores), jnp.asarray(probes),
+        jnp.int32(cnt), tile_n=tile, interpret=True)
+    want = ref.rank_join_lookup_ref(
+        jnp.asarray(keys), jnp.asarray(scores), jnp.asarray(probes),
+        jnp.int32(cnt))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_repo_tree_is_clean():
+    """The shipped tree passes its own linter with the checked-in
+    baseline — the same gate CI runs."""
+    assert main([str(REPO / "src" / "repro"),
+                 "--baseline", str(REPO / "speclint_baseline.json")]) == 0
