@@ -253,14 +253,17 @@ def planner_cost(fast: bool = False):
 
 
 def serving_throughput(fast: bool = False):
-    """Micro-batched serving vs the sequential ``run_query`` loop.
+    """Default serving executor vs the sequential ``run_query`` loop.
 
-    Sweeps micro-batch size over a serving-cell workload (short
-    post-pushdown posting lists, paper-granularity small-block pulls) and
-    reports QPS, per-request latency percentiles, and the wasted-iteration
-    fraction (lockstep trips finished lanes sat frozen). The batched
+    The default executor is the unified loop in its continuous-refill
+    streaming configuration (the same configuration ``launch.serve``
+    defaults to): each sweep point gives it ``lanes`` device lanes over a
+    64-deep admission queue on a serving-cell workload (short
+    post-pushdown posting lists, paper-granularity small-block pulls),
+    reporting QPS, per-request latency percentiles, and the
+    wasted-iteration fraction (end-of-stream drain trips). The served
     top-k keys/scores are asserted element-wise identical to per-query
-    ``run_query`` — batching is a pure throughput transform.
+    ``run_query`` — serving is a pure throughput transform.
 
     Caveat for reading the numbers: on a small CPU the executor's
     per-trip work is partly compute-bound, so batching amortizes dispatch
@@ -271,11 +274,11 @@ def serving_throughput(fast: bool = False):
     from repro.launch import batching
 
     L, B, G, n_relax = 32, 8, 256, 3
-    # Q stays 64 in the fast profile: the planned-work scheduler needs a
-    # few batches' worth of requests per sweep point to compose
-    # similar-cost lanes, and the sweep is seconds-scale at this geometry.
+    # Q stays 64 in the fast profile: the admission queue needs a few
+    # lanes' worth of requests per sweep point for the refill machinery
+    # to matter, and the sweep is seconds-scale at this geometry.
     Q = 64
-    batch_sizes = (1, 4, 16) if fast else (1, 4, 16, 64)
+    lane_counts = (1, 4, 16) if fast else (1, 4, 16, 64)
     wl = kg_synth.make_workload("xkg_mini", list_len=L, n_queries=Q,
                                 seed=0, n_relax=n_relax)
     cfg = EngineConfig(block=B, k=10, grid_bins=G)
@@ -297,15 +300,15 @@ def serving_throughput(fast: bool = False):
         seq_keys.append((np.asarray(r.keys), np.asarray(r.scores)))
     seq_wall = time.perf_counter() - t0
 
-    rows = [dict(batch=0, qps=Q / seq_wall,
+    rows = [dict(lanes=0, qps=Q / seq_wall,
                  p50=float(np.percentile(seq_lat, 50)),
                  p99=float(np.percentile(seq_lat, 99)),
                  wasted=0.0, speedup=1.0, match=1.0)]
-    for bs in batch_sizes:
+    for ln in lane_counts:
         bcfg = batching.BatchingConfig(
-            max_batch=bs, max_wait_s=0.002,
-            q_buckets=tuple(b for b in (1, 4, 16, 64) if b <= bs),
-            t_buckets=t_set)
+            max_batch=ln, max_wait_s=0.002,
+            q_buckets=tuple(b for b in (1, 4, 16, 64) if b <= ln),
+            t_buckets=t_set, refill=True, lanes=ln, refill_depth=Q)
         ex = batching.BatchExecutor(wl.store, wl.relax, cfg, "specqp", bcfg)
         ex.warmup()
         ex.run(queries)          # warm the scheduler path end to end
@@ -321,20 +324,21 @@ def serving_throughput(fast: bool = False):
         plan_amort = ex.plan_total_s / max(len(queries), 1)
         lat = np.asarray([s.exec_s + plan_amort for s in ex.stats
                           for _ in range(s.n_requests)])
-        rows.append(dict(batch=bs, qps=Q / wall,
+        rows.append(dict(lanes=ln, qps=Q / wall,
                          p50=float(np.percentile(lat, 50)),
                          p99=float(np.percentile(lat, 99)),
                          wasted=ex.wasted_fraction(),
                          speedup=seq_wall / wall, match=match))
 
-    out = ["\n### Serving throughput — micro-batched executor vs the "
-           f"sequential run_query loop (xkg_mini L={L} B={B} R={n_relax}, "
-           f"{Q} queries, specqp)",
-           "| batch | QPS | p50 (ms) | p99 (ms) | wasted-iter frac | "
+    out = ["\n### Serving throughput — default (continuous-refill) "
+           "executor vs the sequential run_query loop "
+           f"(xkg_mini L={L} B={B} R={n_relax}, "
+           f"{Q} queries, depth-{Q} queue, specqp)",
+           "| lanes | QPS | p50 (ms) | p99 (ms) | wasted-iter frac | "
            "speedup vs sequential | top-k match |",
            "|---|---|---|---|---|---|---|"]
     for r in rows:
-        label = "seq" if r["batch"] == 0 else str(r["batch"])
+        label = "seq" if r["lanes"] == 0 else str(r["lanes"])
         out.append(
             f"| {label} | {r['qps']:.1f} | {r['p50']*1e3:.2f} "
             f"| {r['p99']*1e3:.2f} | {r['wasted']:.3f} "
@@ -343,8 +347,8 @@ def serving_throughput(fast: bool = False):
 
 
 def serving_refill(fast: bool = False):
-    """Continuous-refill streaming executor vs fixed micro-batches
-    (DESIGN.md §8) on a skewed serving stream.
+    """Continuous-refill vs fixed micro-batch configurations of the ONE
+    unified executor (DESIGN.md §8) on a skewed serving stream.
 
     The workload's queries span a wide range of lockstep trip counts
     (mixed pattern counts, mixed planned work), so fixed micro-batches

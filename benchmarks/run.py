@@ -74,8 +74,10 @@ def main() -> None:
         emit(f"plan_mask_agreement_L{r['L']},{r['plan_sketch']*1e6:.0f},"
               f"{r['agree']:.3f}")
     for r in serve_rows:
+        # Default executor rows: the unified loop's continuous-refill
+        # configuration (lanes sweep over a depth-64 admission queue).
         # us_per_call = per-request p50 latency; derived varies per row.
-        tag = "seq" if r["batch"] == 0 else f"b{r['batch']}"
+        tag = "seq" if r["lanes"] == 0 else f"lanes{r['lanes']}"
         emit(f"serving_qps_{tag},{r['p50']*1e6:.0f},{r['qps']:.1f}")
         emit(f"serving_p99_{tag},{r['p99']*1e6:.0f},{r['p99']*1e3:.2f}")
         emit(f"serving_speedup_{tag},{r['p50']*1e6:.0f},"

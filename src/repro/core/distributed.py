@@ -30,7 +30,6 @@ from repro.core.types import (TripleStore, RelaxTable, EngineResult,
 from repro.core import kg as kglib
 from repro.core import sketches as sketchlib
 from repro.core import engine, estimator, histogram, plangen
-from repro.core import operators as ops
 
 
 def mix_hash(keys: np.ndarray, n_shards: int) -> np.ndarray:
@@ -154,26 +153,29 @@ def _shard_body(store: TripleStore, relax: RelaxTable,
     else:
         raise ValueError(mode)
 
-    streams = ops.gather_streams(store, relax, pattern_ids, mask)
-    st = engine._execute(streams, cfg)
+    # Local execution routes through the unified executor (the same
+    # _step loop as every host entry point) in its single-query
+    # degenerate configuration: depth-1 queue on one lane.
+    local = engine.execute_queue(store, relax, pattern_ids[None],
+                                 mask[None], cfg, lanes=1)
 
     # Two-level merge of local top-k buffers.
-    keys, scores = st.top_keys, st.top_scores
+    keys, scores = local.keys[0], local.scores[0]
     for ax in axis_names:
         keys = jax.lax.all_gather(keys, ax).reshape(-1)
         scores = jax.lax.all_gather(scores, ax).reshape(-1)
         scores, idx = jax.lax.top_k(scores, cfg.k)
         keys = keys[idx]
-    n_pulled = st.n_pulled
-    n_answers = st.n_answers
-    n_iters = st.n_iters
+    n_pulled = local.n_pulled[0]
+    n_answers = local.n_answers[0]
+    n_iters = local.n_iters[0]
     for ax in axis_names:
         n_pulled = jax.lax.psum(n_pulled, ax)
         n_answers = jax.lax.psum(n_answers, ax)
         n_iters = jax.lax.pmax(n_iters, ax)
     return EngineResult(keys=keys, scores=scores, n_pulled=n_pulled,
                         n_answers=n_answers, n_iters=n_iters,
-                        n_wasted=st.n_wasted, relax_mask=mask)
+                        n_wasted=local.n_wasted[0], relax_mask=mask)
 
 
 def run_query_sharded(skg: ShardedKG, pattern_ids: jax.Array,

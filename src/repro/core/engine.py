@@ -8,6 +8,13 @@ paper's coarser per-pattern speculation (``mask.any(axis=1)`` broadcast),
 kept as an ablation baseline. The executor is an n-ary bound-driven rank
 join over blockwise incremental merges, carried entirely through
 ``lax.while_loop`` so the whole query (planning included) jits and vmaps.
+
+There is exactly ONE executor loop (``_execute_refill``, reached via
+``execute_queue``): single-query, fixed-batch, and continuous-refill
+serving are degenerate configurations of its (queue depth M, lanes)
+knobs — see the ``_execute_refill`` docstring for the table. Answer
+equality across configurations is machine-checked by
+tests/test_executor_equiv.py against the ``naive_full_scan`` oracle.
 """
 from __future__ import annotations
 
@@ -68,11 +75,13 @@ def _init_state(T: int, R1: int, N: int, k: int) -> _LoopState:
 
 
 def _step(streams: ops.MergedStreams, st: _LoopState, cfg: EngineConfig,
-          N: int, batched: bool = False) -> _LoopState:
+          N: int) -> _LoopState:
     """One pull-join-bound iteration of the rank join for ONE query.
 
-    Shared by the single-query executor (which runs it until ``done``) and
-    the batch executor (which vmaps it and freezes finished lanes).
+    This is THE loop body: every entry point (single query, fixed batch,
+    continuous-refill stream, sharded execution) reaches it through the
+    unified executor (``_execute_refill``), which vmaps it across lanes
+    and freezes lanes whose HRJN bound has closed.
     """
     T, R1, L = streams.keys.shape
     B = cfg.block
@@ -123,33 +132,27 @@ def _step(streams: ops.MergedStreams, st: _LoopState, cfg: EngineConfig,
 
     # Append the block to t*'s seen buffer (fixed B slots per pull;
     # wraps as a ring when a seen_cap is configured). N is a multiple
-    # of B, so start is always block-aligned and start + B <= N. Two
-    # equivalent implementations: the single-query path uses
-    # dynamic_update_slice (cheapest un-vmapped); the batch executor sets
-    # ``batched=True`` to use a one-hot mask-and-reduce instead, because a
-    # slice update with per-lane starts lowers to an XLA scatter that the
-    # CPU backend runs as a scalar loop under the lane vmap.
+    # of B, so start is always block-aligned and start + B <= N. The
+    # append is a one-hot mask-and-reduce rather than a
+    # dynamic_update_slice because _step always runs under the unified
+    # executor's lane vmap, and a slice update with per-lane starts
+    # lowers to an XLA scatter that the CPU backend runs as a scalar
+    # loop under vmap.
     blk_s_store = jnp.where(blk_s == NEG_INF, 0.0, blk_s)
 
     def append(t):
         start = st.seen_cnt[t] % jnp.int32(N)
-        if batched:
-            rel = jnp.arange(N) - start                    # (N,)
-            oh = rel[:, None] == jnp.arange(B)[None, :]    # (N, B)
-            in_win = (rel >= 0) & (rel < B)
-            upd_k = jnp.where(
-                in_win,
-                jnp.sum(jnp.where(oh, blk_k[None, :], 0), axis=1),
-                st.seen_keys[t])
-            upd_s = jnp.where(
-                in_win,
-                jnp.sum(jnp.where(oh, blk_s_store[None, :], 0.0), axis=1),
-                st.seen_scores[t])
-        else:
-            upd_k = jax.lax.dynamic_update_slice(
-                st.seen_keys[t], blk_k, (start,))
-            upd_s = jax.lax.dynamic_update_slice(
-                st.seen_scores[t], blk_s_store, (start,))
+        rel = jnp.arange(N) - start                    # (N,)
+        oh = rel[:, None] == jnp.arange(B)[None, :]    # (N, B)
+        in_win = (rel >= 0) & (rel < B)
+        upd_k = jnp.where(
+            in_win,
+            jnp.sum(jnp.where(oh, blk_k[None, :], 0), axis=1),
+            st.seen_keys[t])
+        upd_s = jnp.where(
+            in_win,
+            jnp.sum(jnp.where(oh, blk_s_store[None, :], 0.0), axis=1),
+            st.seen_scores[t])
         sel = t == t_star
         return (jnp.where(sel, upd_k, st.seen_keys[t]),
                 jnp.where(sel, upd_s, st.seen_scores[t]))
@@ -179,65 +182,6 @@ def _step(streams: ops.MergedStreams, st: _LoopState, cfg: EngineConfig,
         # top-k buffer itself dedups, so results stay correct).
         n_answers=st.n_answers + jnp.sum(cand_ok).astype(jnp.int32),
         n_iters=st.n_iters + 1, n_wasted=st.n_wasted, done=done)
-
-
-def _execute(streams: ops.MergedStreams, cfg: EngineConfig) -> _LoopState:
-    """Run the n-ary rank join to completion. Returns final _LoopState."""
-    T, R1, L = streams.keys.shape
-    N = _seen_size(R1, L, cfg)
-    max_iters = _max_iters(T, R1, L, cfg)
-    final = jax.lax.while_loop(
-        lambda s: (~s.done) & (s.n_iters < max_iters),
-        lambda s: _step(streams, s, cfg, N),
-        _init_state(T, R1, N, cfg.k))
-    return final
-
-
-def _execute_batch(streams: ops.MergedStreams,
-                   cfg: EngineConfig) -> _LoopState:
-    """Batch-aware executor: every field of ``streams`` has a leading (Q,)
-    axis; returns a _LoopState whose fields all have a leading (Q,) axis.
-
-    One ``lax.while_loop`` drives the whole micro-batch; each trip vmaps
-    ``_step`` across lanes, but a lane whose HRJN bound already closed (or
-    that hit its iteration budget) gets a *masked no-op body*: its state is
-    frozen, so its cursors stop advancing, its seen rings stop mutating,
-    and its counters (n_pulled / n_answers / n_iters) equal the values the
-    single-query executor would report — batched results are element-wise
-    identical to per-query ``run_query``. The loop exits when every lane is
-    done, and ``n_wasted`` counts the lockstep trips each lane sat frozen
-    (the price of SIMD batching; benchmarks report the fraction).
-    """
-    Q, T, R1, L = streams.keys.shape
-    N = _seen_size(R1, L, cfg)
-    max_iters = _max_iters(T, R1, L, cfg)
-
-    def lane_step(strm, st: _LoopState) -> _LoopState:
-        live = (~st.done) & (st.n_iters < max_iters)
-        new = _step(strm, st, cfg, N, batched=True)
-        # Freeze only the result-bearing fields of a finished lane (top-k,
-        # counters, done). The big merge state (cursors, seen rings) may
-        # keep mutating harmlessly — nothing reads it once the lane's
-        # outputs are frozen — and skipping its per-trip select avoids
-        # copying the (Q, T, N) rings through a where every trip.
-        keep = lambda old, nw: jnp.where(live, nw, old)
-        return _LoopState(
-            cursors=new.cursors, seen_keys=new.seen_keys,
-            seen_scores=new.seen_scores, seen_cnt=new.seen_cnt,
-            top_keys=keep(st.top_keys, new.top_keys),
-            top_scores=keep(st.top_scores, new.top_scores),
-            n_pulled=keep(st.n_pulled, new.n_pulled),
-            n_answers=keep(st.n_answers, new.n_answers),
-            n_iters=keep(st.n_iters, new.n_iters),
-            n_wasted=st.n_wasted + jnp.where(live, 0, 1).astype(jnp.int32),
-            done=st.done | new.done)
-
-    init = jax.vmap(lambda _: _init_state(T, R1, N, cfg.k))(jnp.arange(Q))
-    final = jax.lax.while_loop(
-        lambda s: jnp.any((~s.done) & (s.n_iters < max_iters)),
-        lambda s: jax.vmap(lane_step)(streams, s),
-        init)
-    return final
 
 
 def _bsel(mask: jax.Array, new: jax.Array, old: jax.Array) -> jax.Array:
@@ -292,7 +236,7 @@ class _RefillCarry(NamedTuple):
 def _execute_refill(store: TripleStore, relax: RelaxTable,
                     queue_pids: jax.Array, queue_masks: jax.Array,
                     cfg: EngineConfig, lanes: int) -> _RefillCarry:
-    """Continuous-refill streaming executor (DESIGN.md §8).
+    """The one true executor: a continuous-refill lane loop (DESIGN.md §8).
 
     The whole (M, T) query queue lives on device; ``lanes`` lanes run under
     ONE ``lax.while_loop``. The moment a lane's HRJN bound closes (or its
@@ -304,14 +248,29 @@ def _execute_refill(store: TripleStore, relax: RelaxTable,
     the queue is drained, so the fixed-batch executor's per-batch tail
     barrier becomes a single end-of-stream drain.
 
-    Per-query results are element-wise identical to ``run_query``: each
-    query runs the same ``_step`` sequence from the same fresh state; the
-    lane it happens to occupy is invisible to it. ``out_wasted`` follows
-    the drain: an idle lane's trips are attributed to the LAST query it
-    served (queries served mid-stream report 0), so the per-query sum is
-    the stream's total idle-lane trips — directly comparable to the
-    fixed-batch executor's frozen-lane total.
+    Every public entry point is a degenerate configuration of this loop
+    (there is no other loop body; see ``execute_queue``):
+
+      single query  — M = 1, lanes = 1: the lone lane runs one query to
+                      completion and the loop exits (out_wasted ≡ 0);
+      fixed batch   — lanes = M: every queue entry is admitted up front,
+                      ``next_idx`` starts at M, so ``cand >= M`` on every
+                      trip and the splice path is statically unreachable —
+                      finished lanes freeze exactly like a fixed batch;
+      refill stream — lanes < M: the general case described above.
+
+    Per-query results are element-wise identical in every configuration:
+    each query runs the same ``_step`` sequence from the same fresh state;
+    the lane it happens to occupy is invisible to it. ``out_wasted``
+    counts the lockstep trips a lane sat idle after finishing, attributed
+    to the LAST query the lane served — in the fixed-batch configuration
+    that reproduces the frozen-lane accounting (a lane finished early
+    accrues one wasted trip per remaining lockstep trip), and in the
+    refill configuration it is the end-of-stream drain (queries served
+    mid-stream report 0).
     """
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
     M, T = queue_pids.shape
     R1 = relax.ids.shape[1] + 1
     L = store.keys.shape[1]
@@ -342,10 +301,10 @@ def _execute_refill(store: TripleStore, relax: RelaxTable,
 
     def lane_step(strm, s: _LoopState) -> _LoopState:
         live = ~s.done
-        new = _step(strm, s, cfg, N, batched=True)
-        # Same freeze discipline as _execute_batch: only result-bearing
-        # fields of an idle lane are pinned; its merge state may mutate
-        # harmlessly (nothing reads it — a refill replaces it wholesale).
+        new = _step(strm, s, cfg, N)
+        # Freeze discipline: only result-bearing fields of an idle lane
+        # are pinned; its merge state may mutate harmlessly (nothing
+        # reads it — a refill replaces it wholesale).
         keep = lambda old, nw: jnp.where(live, nw, old)
         return _LoopState(
             cursors=new.cursors, seen_keys=new.seen_keys,
@@ -406,6 +365,26 @@ def _execute_refill(store: TripleStore, relax: RelaxTable,
         body, carry0)
 
 
+def execute_queue(store: TripleStore, relax: RelaxTable,
+                  queue_pids: jax.Array, queue_masks: jax.Array,
+                  cfg: EngineConfig, lanes: int) -> EngineResult:
+    """Execute an (M, T) query queue under precomputed (M, T, R) plans.
+
+    The single funnel into ``_execute_refill``: every entry point —
+    ``run_query`` (M = lanes = 1), ``run_query_batch[_with_masks]``
+    (lanes = M), ``run_query_stream[_with_masks]`` (lanes free), and the
+    sharded ``distributed._shard_body`` — builds its call here, so there
+    is exactly one loop body (``_step``) to test, profile, and port to
+    Pallas. Returns an ``EngineResult`` whose fields carry a leading (M,)
+    axis in queue order.
+    """
+    fin = _execute_refill(store, relax, queue_pids, queue_masks, cfg, lanes)
+    return EngineResult(
+        keys=fin.out_keys, scores=fin.out_scores, n_pulled=fin.out_pulled,
+        n_answers=fin.out_answers, n_iters=fin.out_iters,
+        n_wasted=fin.out_wasted, relax_mask=queue_masks)
+
+
 def plan_for_mode(store: TripleStore, relax: RelaxTable,
                   pattern_ids: jax.Array, cfg: EngineConfig,
                   mode: str) -> jax.Array:
@@ -434,14 +413,15 @@ def run_query(store: TripleStore, relax: RelaxTable, pattern_ids: jax.Array,
     """Answer one star query.
 
     mode ∈ {"trinit", "specqp", "specqp_pattern", "join_only"}.
+
+    A degenerate configuration of the unified executor: a depth-1 queue
+    on a single lane (``n_wasted`` is identically 0 — the loop exits the
+    trip the query finishes).
     """
     mask = plan_for_mode(store, relax, pattern_ids, cfg, mode)
-    streams = ops.gather_streams(store, relax, pattern_ids, mask)
-    st = _execute(streams, cfg)
-    return EngineResult(
-        keys=st.top_keys, scores=st.top_scores, n_pulled=st.n_pulled,
-        n_answers=st.n_answers, n_iters=st.n_iters, n_wasted=st.n_wasted,
-        relax_mask=mask)
+    res = execute_queue(store, relax, pattern_ids[None], mask[None],
+                        cfg, lanes=1)
+    return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
 @partial(jax.jit, static_argnames=("cfg", "mode"))
@@ -460,28 +440,30 @@ def plan_query_batch(store, relax, pattern_ids_batch, cfg: EngineConfig,
 def run_query_batch_with_masks(store, relax, pattern_ids_batch,
                                masks: jax.Array,
                                cfg: EngineConfig) -> EngineResult:
-    """Execute a (Q, T) batch under precomputed (Q, T, R) plans."""
-    streams = jax.vmap(
-        lambda pids, m: ops.gather_streams(store, relax, pids, m)
-    )(pattern_ids_batch, masks)
-    st = _execute_batch(streams, cfg)
-    return EngineResult(
-        keys=st.top_keys, scores=st.top_scores, n_pulled=st.n_pulled,
-        n_answers=st.n_answers, n_iters=st.n_iters, n_wasted=st.n_wasted,
-        relax_mask=masks)
+    """Execute a (Q, T) batch under precomputed (Q, T, R) plans.
+
+    Fixed-batch degenerate configuration of the unified executor: one
+    lane per queue entry, so every query is admitted up front and the
+    splice path never fires — finished lanes freeze until the batch tail,
+    and per-lane ``n_wasted`` counts the frozen lockstep trips.
+    """
+    Q = pattern_ids_batch.shape[0]
+    return execute_queue(store, relax, pattern_ids_batch, masks, cfg,
+                         lanes=Q)
 
 
 @partial(jax.jit, static_argnames=("cfg", "mode"))
 def run_query_batch(store, relax, pattern_ids_batch, cfg: EngineConfig,
                     mode: str = "specqp") -> EngineResult:
-    """Answer a (Q, T) batch of star queries through the batch executor.
+    """Answer a (Q, T) batch of star queries (fixed-batch configuration).
 
     Planning and stream gathering vmap per lane; execution runs under ONE
-    while_loop with lane-masked early exit (``_execute_batch``), so a fast
-    lane stops pulling/merging the moment its own HRJN bound closes instead
-    of shadow-executing until the slowest lane terminates. Results are
-    element-wise identical to per-query ``run_query`` (the serving layer's
-    correctness contract; see tests/test_serving.py), and per-lane
+    while_loop with lane-masked early exit (the unified executor at
+    lanes = Q), so a fast lane stops pulling/merging the moment its own
+    HRJN bound closes instead of shadow-executing until the slowest lane
+    terminates. Results are element-wise identical to per-query
+    ``run_query`` (the serving layer's correctness contract; see
+    tests/test_serving.py and tests/test_executor_equiv.py), and per-lane
     ``n_wasted`` exposes the residual lockstep cost.
     """
     masks = jax.vmap(
@@ -502,12 +484,8 @@ def run_query_stream_with_masks(store, relax, pattern_ids_queue,
     and the n_pulled/n_answers/n_iters counters are element-wise identical
     to per-query ``run_query``; ``n_wasted`` is the drain accounting (idle
     trips of the serving lane, attributed to its last query)."""
-    fin = _execute_refill(store, relax, pattern_ids_queue, masks, cfg,
-                          lanes)
-    return EngineResult(
-        keys=fin.out_keys, scores=fin.out_scores, n_pulled=fin.out_pulled,
-        n_answers=fin.out_answers, n_iters=fin.out_iters,
-        n_wasted=fin.out_wasted, relax_mask=masks)
+    return execute_queue(store, relax, pattern_ids_queue, masks, cfg,
+                         lanes)
 
 
 @partial(jax.jit, static_argnames=("cfg", "mode", "lanes"))

@@ -84,9 +84,9 @@ class EngineResult:
     n_pulled: jax.Array    # () int32 — items materialized from input lists
     n_answers: jax.Array   # () int32 — (partial) answer objects created
     n_iters: jax.Array     # () int32 — while-loop trips doing real work
-    n_wasted: jax.Array    # () int32 — lockstep trips spent frozen after
-                           # this lane finished (0 outside batch execution;
-                           # see engine._execute_batch / DESIGN.md §8)
+    n_wasted: jax.Array    # () int32 — lockstep trips spent idle after
+                           # this lane finished (0 for single queries;
+                           # see engine._execute_refill / DESIGN.md §8)
     relax_mask: jax.Array  # (T, R) bool — which relaxation sources joined
                            # the merge (the plan; all-True for TriniT). The
                            # per-pattern view is relax_mask.any(axis=1).
@@ -113,7 +113,7 @@ class EngineConfig:
     pallas_interpret: bool = True
     # Cap on the per-stream seen buffer (None = worst-case R1·L sizing).
     # The executor rounds the cap up to a whole number of blocks so the
-    # ring wraps block-aligned (see engine._execute).
+    # ring wraps block-aligned (see engine._seen_size).
     # Rank joins terminate long before worst case in practice; the cap
     # bounds the probe bytes per iteration (§Perf on the kg-specqp cell).
     # Overflowing the cap wraps the ring (answers pulled that deep may be

@@ -29,9 +29,15 @@ ragged pattern counts. This module is the glue between the two:
   end-of-queue drain. ``pipeline`` double-buffers the offline path: the
   host plans group i+1 while the device executes group i.
 
+Both execution paths run the engine's ONE unified executor loop
+(``engine.execute_queue`` → ``engine._execute_refill``): the fixed-batch
+call is its lanes = Q degenerate configuration and the refill call its
+general lanes < M configuration, so "which executor" is purely a
+(queue depth, lanes) knob setting here — there is no second loop body.
+
 Correctness contract: per-request results are element-wise identical to
 ``engine.run_query`` on the unpadded query (tests/test_serving.py,
-tests/test_refill.py).
+tests/test_refill.py, tests/test_executor_equiv.py).
 """
 from __future__ import annotations
 
@@ -100,12 +106,25 @@ class BatchingConfig:
     pipeline: bool = False
 
     def __post_init__(self):
-        assert self.max_batch <= max(self.q_buckets), (
-            "q_buckets must cover max_batch")
-        assert not self.refill or self.refill_depth >= self.max_batch, (
-            "refill_depth must cover max_batch (MicroBatcher flush groups "
-            "are admitted whole)")
-        assert self.lanes is None or self.lanes >= 1
+        # Validate at construction time with real exceptions (asserts
+        # vanish under `python -O`, and a bad knob that slips through
+        # here only surfaces as a shape error deep inside jit).
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_batch > max(self.q_buckets):
+            raise ValueError(
+                f"q_buckets {self.q_buckets} must cover max_batch "
+                f"{self.max_batch}")
+        if self.lanes is not None and self.lanes < 1:
+            raise ValueError(f"lanes must be >= 1 (or None), got {self.lanes}")
+        if self.refill_depth < 1:
+            raise ValueError(
+                f"refill_depth must be >= 1, got {self.refill_depth}")
+        if self.refill and self.refill_depth < self.max_batch:
+            raise ValueError(
+                "refill_depth must cover max_batch (MicroBatcher flush "
+                f"groups are admitted whole): {self.refill_depth} < "
+                f"{self.max_batch}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,7 +244,8 @@ class BatchExecutor:
         (plan, execute-with-masks) are compiled per shape.
         """
         t_buckets = t_buckets or self.bcfg.t_buckets
-        assert t_buckets, "warmup needs explicit or configured t_buckets"
+        if not t_buckets:
+            raise ValueError("warmup needs explicit or configured t_buckets")
         q_cover = bucket_for(self.bcfg.max_batch, self.bcfg.q_buckets)
         n = 0
         for t_b in t_buckets:
@@ -235,9 +255,9 @@ class BatchExecutor:
                 dummy = jnp.full((q_b, t_b), PAD_KEY, jnp.int32)
                 masks = engine.plan_query_batch(
                     self.store, self.relax, dummy, self.cfg, self.mode)
-                # With refill on, the fixed-batch executor is unreachable
-                # (run_batch redirects to run_stream) — warm only the plan
-                # shapes, which the offline plan chunking still uses.
+                # With refill on, the fixed-batch configuration is
+                # unreachable (run_batch redirects to run_stream) — warm
+                # only the plan shapes, which plan chunking still uses.
                 if not self.bcfg.refill:
                     jax.block_until_ready(
                         engine.run_query_batch_with_masks(
@@ -351,7 +371,9 @@ class BatchExecutor:
         """
         if self.bcfg.refill:
             return self.run_stream(group, masks)
-        assert 0 < len(group) <= self.bcfg.max_batch
+        if not 0 < len(group) <= self.bcfg.max_batch:
+            raise ValueError(
+                f"group size {len(group)} not in [1, {self.bcfg.max_batch}]")
         t_b = self._t_bucket(max(self._true_t(q) for q in group))
         q_b = bucket_for(len(group), self.bcfg.q_buckets)
         batch = self._pad_group(group, t_b, q_b)
@@ -385,7 +407,10 @@ class BatchExecutor:
         to ``run_query``; the batch-tail freeze of ``run_batch`` shrinks
         to the end-of-queue drain.
         """
-        assert 0 < len(group) <= self.bcfg.refill_depth
+        if not 0 < len(group) <= self.bcfg.refill_depth:
+            raise ValueError(
+                f"queue size {len(group)} not in "
+                f"[1, {self.bcfg.refill_depth}]")
         t_b = self._t_bucket(max(self._true_t(q) for q in group))
         m_b = self._m_bucket(len(group))
         batch = self._pad_group(group, t_b, m_b)

@@ -3,7 +3,9 @@
 ``python -m repro.launch.serve --dataset xkg_mini --mode specqp --k 10``
 loads (generates) a workload and serves it through the micro-batching
 layer (``repro.launch.batching``): requests are queued, padded into shape
-buckets, answered by the batch-aware executor, and unpadded — reporting
+buckets, answered by the unified executor — in its continuous-refill
+streaming configuration by default; ``--no-refill`` selects the
+fixed-batch (lanes = batch) configuration — and unpadded, reporting
 QPS + latency percentiles + the wasted-iteration fraction against the
 sequential one-query-at-a-time baseline. ``--arrival-qps`` replays the
 workload as a Poisson arrival process through the threaded MicroBatcher
@@ -55,10 +57,13 @@ def main():
     ap.add_argument("--n-queries", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
-    ap.add_argument("--refill", action="store_true",
-                    help="continuous-refill streaming executor: finished "
-                         "lanes are spliced with queued queries instead of "
-                         "freezing until the batch tail")
+    ap.add_argument("--refill", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="continuous-refill streaming configuration of the "
+                         "unified executor (the default): finished lanes "
+                         "are spliced with queued queries instead of "
+                         "freezing until the batch tail; --no-refill "
+                         "serves fixed micro-batches (lanes = batch)")
     ap.add_argument("--lanes", type=int, default=None,
                     help="device lanes for --refill (default: max-batch)")
     ap.add_argument("--refill-depth", type=int, default=64,
@@ -71,6 +76,14 @@ def main():
                          "threaded MicroBatcher (default: offline batches)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    # Fail bad knobs at the CLI boundary with argparse's usage message
+    # (BatchingConfig re-validates with ValueError for library callers).
+    if args.lanes is not None and args.lanes < 1:
+        ap.error(f"--lanes must be >= 1, got {args.lanes}")
+    if args.refill_depth < 1:
+        ap.error(f"--refill-depth must be >= 1, got {args.refill_depth}")
+    if args.max_batch < 1:
+        ap.error(f"--max-batch must be >= 1, got {args.max_batch}")
 
     wl = kg_synth.make_workload(args.dataset, list_len=args.list_len,
                                 n_queries=args.n_queries, seed=args.seed)

@@ -40,6 +40,29 @@ def small_workload(seed=0, n_queries=8, n_entities=TEST_N_ENTITIES,
 def wl_factory():
     return small_workload
 
+
+# ---------------------------------------------------------------------------
+# Trace-count probe (promoted from tests/test_speclint.py so every module
+# can guard against retrace regressions): measures how many NEW jit
+# specializations a block of calls compiles. jax's jitted callables expose
+# the compiled-specialization count as ``fn._cache_size()`` (jax 0.4.x);
+# the fixture hides that private probe behind one seam so a jax upgrade
+# only patches this spot.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def jit_trace_growth():
+    def growth(jitted_fn, *calls):
+        """Run each zero-arg thunk in ``calls``; return how many NEW
+        specializations ``jitted_fn`` compiled across them (0 = every
+        call hit an existing specialization)."""
+        import jax
+        before = jitted_fn._cache_size()
+        for call in calls:
+            jax.block_until_ready(call())
+        return jitted_fn._cache_size() - before
+    return growth
+
 # ---------------------------------------------------------------------------
 # Optional-dependency shim: `hypothesis` is not part of the baked image.
 # When it is missing we install a tiny deterministic stand-in so the

@@ -1,0 +1,245 @@
+"""Differential test harness for the unified executor.
+
+One generator + one frontend table so tests/test_executor_equiv.py can
+drive every executor configuration of the ONE loop body
+(``engine._execute_refill`` via ``engine.execute_queue``) over the same
+seeded ragged workloads and compare them element-wise — against each
+other and against the ``engine.naive_full_scan`` oracle.
+
+Executor frontends (all return per-query results in queue order):
+
+  single       — a Python loop of ``run_query`` calls (M = lanes = 1 per
+                 call): the reference the serving contract is stated in.
+  fixed        — ``run_query_batch``: the lanes = M degenerate
+                 configuration (splice statically unreachable).
+  refill       — ``run_query_stream`` with lanes < M: the general
+                 continuous-refill configuration.
+  refill_pipe  — the serving layer's double-buffered plan/execute path
+                 (``launch.batching.BatchExecutor`` with refill +
+                 pipeline), i.e. the refill configuration reached through
+                 bucket padding and the planned-work scheduler.
+
+Workload geometry deliberately reuses the shared conftest shapes
+(``small_workload``, block=16/k=5/grid_bins=TEST_GRID_BINS) so the jit
+specializations are shared with test_engine/test_serving/test_refill —
+keeping the fast profile inside its CI wall-clock budget.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from conftest import small_workload, TEST_GRID_BINS
+from repro.core import engine, kg
+from repro.core.types import EngineConfig, PAD_KEY
+from repro.launch import batching
+
+CFG = EngineConfig(block=16, k=5, grid_bins=TEST_GRID_BINS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One executor workload: a padded (M, T) queue plus its config."""
+
+    name: str
+    store: object
+    relax: object
+    queue: object           # (M, T) int32, PAD_KEY padded (jnp)
+    cfg: EngineConfig
+    mode: str
+    lanes: int              # lane count for the refill frontends
+    n_entities: int         # oracle scan width
+
+
+def ragged_case(seed: int, m: int, lanes: int, mode: str = "specqp",
+                cardinality_mode: str = "exact", t_pad: int = 0) -> Case:
+    """Seeded ragged workload: ``m`` queries drawn with replacement from
+    the shared synthetic KG (mixed true pattern counts, duplicates
+    allowed — the arrival patterns serving actually sees). ``t_pad``
+    appends extra all-PAD pattern columns, widening T without changing
+    any answer (pad patterns are inactive streams)."""
+    wl = small_workload(seed=0, n_queries=8)
+    rng = np.random.default_rng(seed)
+    idxs = rng.choice(len(wl.queries), size=m, replace=True)
+    queue = np.asarray(wl.queries)[idxs]
+    if t_pad:
+        queue = np.concatenate(
+            [queue, np.full((m, t_pad), int(PAD_KEY), queue.dtype)], axis=1)
+    cfg = (CFG if cardinality_mode == "exact"
+           else dataclasses.replace(CFG, cardinality_mode=cardinality_mode))
+    return Case(name=f"ragged[s{seed},m{m},l{lanes},{mode},"
+                     f"{cardinality_mode}]",
+                store=wl.store, relax=wl.relax, queue=jnp.asarray(queue),
+                cfg=cfg, mode=mode, lanes=lanes, n_entities=wl.n_entities)
+
+
+def ring_kg():
+    """KG engineered so stream 0 of query [0, 1] pulls ≥ 3× a tiny seen
+    cap before its HRJN bound closes — the seen ring wraps ≥ 2×,
+    evicting early keys — while the final top-k still equals the oracle
+    (the construction from tests/test_engine.py's seen-ring regression).
+    """
+    p0_keys = np.concatenate([[1000], np.arange(2000, 2040),
+                              [1001, 1002, 1003, 1004],
+                              np.arange(3000, 3060)]).astype(np.int32)
+    p0_scores = np.concatenate([[1.0], np.linspace(0.99, 0.96, 40),
+                                [0.5, 0.49, 0.48, 0.47],
+                                np.linspace(0.46, 0.44, 60)])
+    p1_keys = np.asarray([1000, 1001, 1002, 1003, 1004,
+                          5000, 5001, 5002], np.int32)
+    p1_scores = np.asarray([1.0, 0.99, 0.98, 0.97, 0.96, 0.35, 0.3, 0.25])
+    p2_keys = np.concatenate([[1000], np.arange(4000, 4010)]).astype(np.int32)
+    p2_scores = np.concatenate([[1.0], np.linspace(0.9, 0.8, 10)])
+    store = kg.build_store([(p0_keys, p0_scores), (p1_keys, p1_scores),
+                            (p2_keys, p2_scores)])
+    relax = kg.build_relax_table(3, {0: [(2, 0.95)]})
+    return store, relax
+
+
+def ring_wrap_case(lanes: int, seen_cap: int = 16) -> Case:
+    """Ring-wrap stress queue [A, A, B, A, B, A] under a tiny seen cap:
+    query A wraps its ring ≥ 2× (tests assert n_pulled ≥ 3·seen_cap), so
+    lane recycling and wrapped-ring dedup are both on the hot path while
+    the oracle comparison stays exact."""
+    store, relax = ring_kg()
+    qa = [0, 1]
+    qb = [2, 1]
+    queue = jnp.asarray([qa, qa, qb, qa, qb, qa], jnp.int32)
+    cfg = EngineConfig(block=8, k=5, grid_bins=TEST_GRID_BINS,
+                       seen_cap=seen_cap)
+    return Case(name=f"ringwrap[l{lanes},cap{seen_cap}]", store=store,
+                relax=relax, queue=queue, cfg=cfg, mode="trinit",
+                lanes=lanes, n_entities=6000)
+
+
+# --------------------------------------------------------------------------
+# Executor frontends. Each returns an EngineResult whose fields carry a
+# leading (M,) axis in queue order (refill_pipe reconstructs one from the
+# serving layer's per-request views; its relax_mask is trimmed per
+# request, so compare masks via the batch frontends instead).
+# --------------------------------------------------------------------------
+
+def run_single(case: Case):
+    singles = [engine.run_query(case.store, case.relax, q, case.cfg,
+                                case.mode) for q in case.queue]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *singles)
+
+
+def run_fixed(case: Case):
+    return engine.run_query_batch(case.store, case.relax, case.queue,
+                                  case.cfg, case.mode)
+
+
+def run_refill(case: Case):
+    return engine.run_query_stream(case.store, case.relax, case.queue,
+                                   case.cfg, case.mode, lanes=case.lanes)
+
+
+def run_refill_pipe(case: Case):
+    m = int(case.queue.shape[0])
+    t_set = tuple(sorted({int((np.asarray(q) >= 0).sum())
+                          for q in np.asarray(case.queue)}))
+    bcfg = batching.BatchingConfig(
+        max_batch=4, max_wait_s=0.01,
+        q_buckets=(1, 4, 8), t_buckets=t_set,
+        refill=True, lanes=case.lanes, refill_depth=max(m, 4),
+        pipeline=True)
+    ex = batching.BatchExecutor(case.store, case.relax, case.cfg,
+                                case.mode, bcfg)
+    served = ex.run([np.asarray(q) for q in case.queue])
+    from repro.core.types import EngineResult
+    return EngineResult(
+        keys=jnp.asarray(np.stack([r.keys for r in served])),
+        scores=jnp.asarray(np.stack([r.scores for r in served])),
+        n_pulled=jnp.asarray([r.n_pulled for r in served], jnp.int32),
+        n_answers=jnp.asarray([r.n_answers for r in served], jnp.int32),
+        n_iters=jnp.asarray([r.n_iters for r in served], jnp.int32),
+        n_wasted=jnp.asarray([r.n_wasted for r in served], jnp.int32),
+        relax_mask=None)
+
+
+EXECUTORS = {
+    "single": run_single,
+    "fixed": run_fixed,
+    "refill": run_refill,
+    "refill_pipe": run_refill_pipe,
+}
+
+
+# --------------------------------------------------------------------------
+# Assertions.
+# --------------------------------------------------------------------------
+
+def assert_results_equal(got, want, ctx="", counters=True):
+    """Element-wise equality of two leading-(M,) EngineResults: exact on
+    top-k keys, 1e-5-relative on scores (summation order may differ from
+    the oracle's scan), exact on work counters. ``n_wasted`` is excluded
+    — it measures lane scheduling, not the query, and legitimately
+    differs across configurations."""
+    np.testing.assert_array_equal(np.asarray(got.keys),
+                                  np.asarray(want.keys),
+                                  err_msg=f"{ctx} keys")
+    np.testing.assert_allclose(np.asarray(got.scores),
+                               np.asarray(want.scores), rtol=1e-5,
+                               err_msg=f"{ctx} scores")
+    if counters:
+        for f in ("n_pulled", "n_answers", "n_iters"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+                err_msg=f"{ctx} {f}")
+
+
+def oracle_results(case: Case, masks):
+    """Per-query ``naive_full_scan`` under each query's own (T, R) plan.
+
+    The executor is exact *with respect to its plan* in every mode — the
+    plan decides which relaxation sources join the merge, the rank join
+    then finds the true top-k of that merge — so oracle equality holds
+    for speculative and sketch-planned modes too, not just trinit.
+    """
+    keys, scores = [], []
+    for q, m in zip(case.queue, masks):
+        bk, bs = engine.naive_full_scan(case.store, case.relax, q,
+                                        case.cfg.k, case.n_entities,
+                                        relax_mask=m)
+        keys.append(bk)
+        scores.append(bs)
+    return jnp.stack(keys), jnp.stack(scores)
+
+
+def assert_oracle_topk(case: Case, res, ctx=""):
+    """Top-k keys/scores equal the full-scan oracle under res's plans."""
+    ok, os_ = oracle_results(case, res.relax_mask)
+    np.testing.assert_array_equal(np.asarray(res.keys), np.asarray(ok),
+                                  err_msg=f"{ctx} oracle keys")
+    np.testing.assert_allclose(np.asarray(res.scores), np.asarray(os_),
+                               rtol=1e-5, err_msg=f"{ctx} oracle scores")
+
+
+def assert_waste_invariants(res, lanes: int, m: int, ctx=""):
+    """Lockstep/waste accounting invariants of the unified executor.
+
+    Every trip, each of the (initially live) lanes either advances its
+    current query (+1 to that query's ``n_iters``) or idles (+1 to the
+    wasted count of the lane's last query), so with lanes ≤ M the total
+    ``Σ n_iters + Σ n_wasted`` is lanes × trips — divisible by the lane
+    count. lanes = 1 never idles (the loop exits with the last query);
+    lanes = M reproduces the fixed-batch freeze: every lane waits on the
+    slowest, so per-lane ``n_iters + n_wasted`` equals max(n_iters).
+    """
+    it = np.asarray(res.n_iters)
+    wa = np.asarray(res.n_wasted)
+    assert (wa >= 0).all() and (it >= 1).all(), ctx
+    if lanes == 1:
+        assert (wa == 0).all(), f"{ctx}: single-lane stream never idles"
+    if lanes <= m:
+        total = int(it.sum() + wa.sum())
+        assert total % lanes == 0, (
+            f"{ctx}: lane-trip conservation broken: {total} trips "
+            f"not divisible by {lanes} lanes")
+    if lanes == m:
+        assert ((it + wa) == it.max()).all(), (
+            f"{ctx}: fixed-batch lockstep accounting broken")
+        assert int(wa[it.argmax()]) == 0, (
+            f"{ctx}: slowest lane cannot have idled")

@@ -1,0 +1,173 @@
+"""Cross-executor differential suite: every configuration of the ONE
+unified executor loop is answer-identical.
+
+The tentpole guarantee behind Spec-QP serving: single-query, fixed-batch,
+continuous-refill, and pipelined-refill execution are all degenerate
+(queue depth, lanes) configurations of ``engine._execute_refill`` — so
+their per-query top-k keys/scores and work counters must be element-wise
+identical to each other AND to the ``naive_full_scan`` oracle, across
+cardinality modes (exact / sketch planner), ragged queues (mixed pattern
+counts, duplicate queries), and ring-wrap configs (a seen_cap small
+enough that the seen ring wraps ≥ 2×). Any future change to ``_step`` —
+including the planned Pallas rank-join port — must keep this suite green.
+
+Also hosts the retrace-count regression guard for the unified entry
+points (conftest ``jit_trace_growth`` fixture).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import harness
+from conftest import TEST_GRID_BINS
+from repro.core import engine
+from repro.core.types import EngineConfig
+
+EXEC_NAMES = tuple(harness.EXECUTORS)          # single/fixed/refill/_pipe
+CARD_MODES = ("exact", "sketch")
+
+# One ragged case per cardinality mode, shared (with its single-executor
+# baseline) across every test in the module so the compile work is paid
+# once. m=8 over lanes=3: a queue that is not a multiple of the lane
+# count, with duplicate queries and mixed pattern counts.
+_CASES: dict = {}
+_BASE: dict = {}
+
+
+def _case(card: str) -> harness.Case:
+    if card not in _CASES:
+        _CASES[card] = harness.ragged_case(seed=1, m=8, lanes=3,
+                                           mode="specqp",
+                                           cardinality_mode=card)
+    return _CASES[card]
+
+
+def _baseline(card: str):
+    if card not in _BASE:
+        _BASE[card] = harness.run_single(_case(card))
+    return _BASE[card]
+
+
+@pytest.mark.parametrize("card", CARD_MODES)
+@pytest.mark.parametrize("name", EXEC_NAMES)
+def test_executor_equiv_ragged(name, card):
+    """{single, fixed, refill, refill_pipe} × {exact, sketch}: top-k and
+    counters equal the per-query reference AND the full-scan oracle."""
+    case = _case(card)
+    res = harness.EXECUTORS[name](case)
+    base = _baseline(card)
+    harness.assert_results_equal(res, base, ctx=f"{name}/{card}")
+    if name == "refill_pipe":
+        # The serving layer trims relax_mask per request; score the
+        # oracle under the batch-computed plans instead.
+        ok, os_ = harness.oracle_results(case, base.relax_mask)
+        np.testing.assert_array_equal(np.asarray(res.keys), np.asarray(ok))
+        np.testing.assert_allclose(np.asarray(res.scores), np.asarray(os_),
+                                   rtol=1e-5)
+    else:
+        harness.assert_oracle_topk(case, res, ctx=f"{name}/{card}")
+
+
+@pytest.mark.parametrize("name", EXEC_NAMES)
+def test_executor_equiv_ring_wrap(name):
+    """Ring-wrap config: a seen_cap forcing ≥ 2 ring wraps per heavy
+    query (asserted via n_pulled) with lane recycling in the refill
+    frontends — answers must still match the oracle exactly."""
+    case = harness.ring_wrap_case(lanes=2)
+    res = harness.EXECUTORS[name](case)
+    base = harness.run_single(case)
+    # The construction really wrapped the ring ≥ 2×.
+    assert int(base.n_pulled[0]) >= 3 * 16, "case lost its wrap property"
+    harness.assert_results_equal(res, base, ctx=f"ring/{name}")
+    if name != "refill_pipe":
+        harness.assert_oracle_topk(case, res, ctx=f"ring/{name}")
+
+
+def test_pad_columns_are_inert():
+    """Widening T with all-PAD pattern columns (the serving layer's shape
+    bucketing) changes no answer and no counter, in any configuration."""
+    plain = harness.ragged_case(seed=3, m=4, lanes=2)
+    padded = harness.ragged_case(seed=3, m=4, lanes=2, t_pad=2)
+    for name in ("fixed", "refill"):
+        a = harness.EXECUTORS[name](plain)
+        b = harness.EXECUTORS[name](padded)
+        harness.assert_results_equal(b, a, ctx=f"t_pad/{name}")
+
+
+@pytest.mark.parametrize("lanes", [1, 2, 3, 8])
+def test_waste_accounting_invariants(lanes):
+    """Lane-trip conservation at every lane count: Σ n_iters + Σ n_wasted
+    ≡ 0 (mod lanes); lanes=1 never idles; lanes=M reproduces the
+    fixed-batch lockstep accounting exactly."""
+    case = harness.ragged_case(seed=1, m=8, lanes=lanes)
+    res = harness.run_refill(case)
+    harness.assert_waste_invariants(res, lanes, m=8, ctx=f"lanes={lanes}")
+    # And results stay exact regardless of the lane count.
+    harness.assert_results_equal(res, _baseline("exact"),
+                                 ctx=f"lanes={lanes}")
+
+
+def test_fixed_batch_waste_matches_lockstep():
+    """The fixed frontend satisfies the lanes = M invariants verbatim."""
+    res = harness.run_fixed(_case("exact"))
+    harness.assert_waste_invariants(res, lanes=8, m=8, ctx="fixed")
+
+
+def test_stream_validates_lanes_at_python_boundary():
+    """lanes < 1 must raise ValueError before any tracing/jit work."""
+    case = _case("exact")
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="lanes"):
+            engine.run_query_stream(case.store, case.relax, case.queue,
+                                    case.cfg, "specqp", lanes=bad)
+        with pytest.raises(ValueError, match="lanes"):
+            engine.run_query_stream_with_masks(
+                case.store, case.relax, case.queue,
+                jnp.zeros(case.queue.shape + (3,), bool), case.cfg,
+                lanes=bad)
+
+
+def _fresh_cfg(card="exact"):
+    # A NEW EngineConfig instance every call: equal by value, distinct by
+    # identity — the retrace guard must rely on __eq__/__hash__, not id.
+    return EngineConfig(block=16, k=5, grid_bins=TEST_GRID_BINS,
+                        cardinality_mode=card)
+
+
+def test_unified_entry_points_compile_at_most_once(jit_trace_growth):
+    """Equal-static-config calls to each unified entry point hit the jit
+    cache: at most one fresh specialization on first use, zero on the
+    equal-but-distinct repeat (guards the unification's static-arg /
+    bucket-key plumbing against accidental cache-splitting)."""
+    case = _case("exact")
+    store, relax, queue = case.store, case.relax, case.queue
+    q0 = queue[0]
+    masks = engine.plan_query_batch(store, relax, queue, _fresh_cfg(),
+                                    "specqp")
+    checks = [
+        (engine.run_query,
+         lambda: engine.run_query(store, relax, q0, _fresh_cfg(),
+                                  "specqp")),
+        (engine.plan_query_batch,
+         lambda: engine.plan_query_batch(store, relax, queue, _fresh_cfg(),
+                                         "specqp")),
+        (engine.run_query_batch,
+         lambda: engine.run_query_batch(store, relax, queue, _fresh_cfg(),
+                                        "specqp")),
+        (engine.run_query_batch_with_masks,
+         lambda: engine.run_query_batch_with_masks(store, relax, queue,
+                                                   masks, _fresh_cfg())),
+        (engine.run_query_stream,
+         lambda: engine.run_query_stream(store, relax, queue, _fresh_cfg(),
+                                         "specqp", lanes=3)),
+        (engine.run_query_stream_with_masks,
+         lambda: engine.run_query_stream_with_masks(store, relax, queue,
+                                                    masks, _fresh_cfg(),
+                                                    lanes=3)),
+    ]
+    for fn, call in checks:
+        name = getattr(fn, "__name__", str(fn))
+        first = jit_trace_growth(fn, call)
+        assert first <= 1, f"{name}: first call compiled {first} times"
+        repeat = jit_trace_growth(fn, call)
+        assert repeat == 0, f"{name}: equal static config retraced"

@@ -30,6 +30,49 @@ def test_rank_join_lookup(N, B, frac):
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
 
 
+def test_rank_join_matches_step_probe_semantics():
+    """Pre-built equivalence oracle for the Pallas swap-in: interpret-mode
+    ``rank_join_lookup`` vs the exact jnp probe the unified executor's
+    ``_step`` runs today (``ops.lookup_scores`` with use_pallas=False), on
+    the awkward inputs the engine actually produces — an N that is NOT a
+    tile multiple (remainder tile is all padding), duplicate keys inside
+    the live window (both probes must SUM every live match identically),
+    a duplicate whose second copy sits past seen_cnt (dead — must not
+    contribute), and PAD probes/slots."""
+    from repro.core import operators as ops
+
+    rng = np.random.default_rng(11)
+    N, tile = 700, 256                     # 700 % 256 != 0
+    cnt = np.int32(520)                    # live window < N
+    keys = rng.choice(50000, N, replace=False).astype(np.int32)
+    scores = rng.random(N).astype(np.float32)
+    # Duplicates inside the live window: key at slot 3 reappears at slots
+    # 300 and 517 (scores differ — the summed score exposes any probe
+    # that stops at the first hit).
+    keys[300] = keys[517] = keys[3]
+    # Duplicate straddling the live boundary: second copy is dead.
+    keys[600] = keys[40]
+    keys[cnt:] = np.where(np.arange(N - cnt) % 3 == 0, -1, keys[cnt:])
+    probes = np.concatenate([
+        [keys[3], keys[40], -1],           # dup hit, straddler, PAD probe
+        rng.choice(keys[:cnt], 16),        # live hits (some dups again)
+        rng.choice(np.arange(60000, 61000), 13),   # guaranteed misses
+    ]).astype(np.int32)
+
+    args = (jnp.asarray(keys), jnp.asarray(scores), jnp.asarray(probes),
+            jnp.int32(cnt))
+    ks, kf = rank_join.rank_join_lookup(*args, tile_n=tile, interpret=True)
+    es, ef = ops.lookup_scores(*args, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(ef))
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(es), rtol=1e-6)
+    # The construction really exercised what it claims.
+    assert np.asarray(ef)[0] and np.asarray(ef)[1] and not np.asarray(ef)[2]
+    want_dup = float(scores[3] + scores[300] + scores[517])
+    np.testing.assert_allclose(float(np.asarray(ks)[0]), want_dup, rtol=1e-6)
+    np.testing.assert_allclose(float(np.asarray(ks)[1]), float(scores[40]),
+                               rtol=1e-6)
+
+
 @pytest.mark.parametrize("R,W,B", [(4, 16, 16), (11, 64, 64), (3, 20, 32),
                                    (1, 128, 64)])
 def test_merge_topk(R, W, B):

@@ -16,9 +16,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from conftest import small_workload, TEST_GRID_BINS
-from repro.core import engine, kg
+from repro.core import engine
 from repro.core import operators as ops
-from repro.core.types import EngineConfig, PAD_KEY, NEG_INF
+from repro.core.types import EngineConfig
 from repro.launch import batching
 
 CFG = EngineConfig(block=16, k=5, grid_bins=TEST_GRID_BINS)
@@ -153,25 +153,12 @@ def test_refill_microbatcher_threaded():
 def _ring_kg():
     """KG engineered so stream 0 of query [0, 1] pulls ≥ 3× a tiny seen
     cap (the ring wraps ≥ 2×, evicting early keys) before its bound
-    closes — the same construction as tests/test_engine.py's seen-ring
-    regression, reused here to stress-test lane *recycling*: a query
-    spliced into that lane re-pulls exactly the keys the previous
-    occupant pulled and evicted."""
-    p0_keys = np.concatenate([[1000], np.arange(2000, 2040),
-                              [1001, 1002, 1003, 1004],
-                              np.arange(3000, 3060)]).astype(np.int32)
-    p0_scores = np.concatenate([[1.0], np.linspace(0.99, 0.96, 40),
-                                [0.5, 0.49, 0.48, 0.47],
-                                np.linspace(0.46, 0.44, 60)])
-    p1_keys = np.asarray([1000, 1001, 1002, 1003, 1004,
-                          5000, 5001, 5002], np.int32)
-    p1_scores = np.asarray([1.0, 0.99, 0.98, 0.97, 0.96, 0.35, 0.3, 0.25])
-    p2_keys = np.concatenate([[1000], np.arange(4000, 4010)]).astype(np.int32)
-    p2_scores = np.concatenate([[1.0], np.linspace(0.9, 0.8, 10)])
-    store = kg.build_store([(p0_keys, p0_scores), (p1_keys, p1_scores),
-                            (p2_keys, p2_scores)])
-    relax = kg.build_relax_table(3, {0: [(2, 0.95)]})
-    return store, relax
+    closes — shared with the cross-executor differential suite (the
+    construction lives in tests/harness.py), reused here to stress-test
+    lane *recycling*: a query spliced into that lane re-pulls exactly
+    the keys the previous occupant pulled and evicted."""
+    from harness import ring_kg
+    return ring_kg()
 
 
 def test_lane_recycling_after_wrapped_ring():

@@ -183,20 +183,22 @@ def test_static_configs_hashable_and_equal():
         assert a == b and hash(a) == hash(b)
 
 
-def test_equal_static_configs_do_not_retrace():
+def test_equal_static_configs_do_not_retrace(jit_trace_growth):
     """Two equal-but-distinct EngineConfig instances as a static arg hit
-    the same jit specialization — one trace, not two."""
-    traces = []
-
+    the same jit specialization — one trace, not two. (The probe lives in
+    the conftest ``jit_trace_growth`` fixture; the unified engine entry
+    points get the same guard in tests/test_executor_equiv.py.)"""
     @functools.partial(jax.jit, static_argnames=("cfg",))
     def probe(x, cfg):
-        traces.append(1)      # runs at trace time only
         return x * cfg.k
 
     x = jnp.ones((4,), jnp.float32)
-    probe(x, EngineConfig(block=16, k=5, grid_bins=96))
-    probe(x, EngineConfig(block=16, k=5, grid_bins=96))
-    assert len(traces) == 1, "equal static configs retraced"
+    first = jit_trace_growth(
+        probe, lambda: probe(x, EngineConfig(block=16, k=5, grid_bins=96)))
+    repeat = jit_trace_growth(
+        probe, lambda: probe(x, EngineConfig(block=16, k=5, grid_bins=96)))
+    assert first == 1, "fresh static config should compile exactly once"
+    assert repeat == 0, "equal static configs retraced"
 
 
 def test_rank_join_pk_rules_clean_and_differential():
